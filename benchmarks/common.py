@@ -1,0 +1,74 @@
+"""Shared benchmark plumbing: standard LS/BE workload sets built from the
+assigned architectures, timing helpers, and the CSV row convention
+(name, us_per_call, derived)."""
+from __future__ import annotations
+
+import time
+
+from repro.configs import get_config
+from repro.core.compute import ComputePolicy
+from repro.core.simulator import (GPU_DEVICES, GPUSimulator, TPU_V5E, Tenant,
+                                  apollo_like_trace, poisson_trace,
+                                  request_kernels)
+
+# paper Tab. 5 analogue on the assigned archs: small nets serve LS, big ones BE
+LS_ARCHS = ["qwen3-1.7b", "stablelm-1.6b", "zamba2-1.2b", "whisper-small"]
+BE_ARCHS = ["gemma2-9b", "nemotron-4-15b", "rwkv6-7b", "moonshot-v1-16b-a3b"]
+
+LS_REQ = dict(B=1, S=128, mode="prefill")
+BE_REQ = dict(B=8, S=256, mode="prefill")
+
+
+def ls_kernels(dev, arch):
+    return request_kernels(get_config(arch), LS_REQ["B"], LS_REQ["S"],
+                           LS_REQ["mode"], dev)
+
+
+def be_kernels(dev, arch):
+    # BE nets run many finer kernels (paper Tab. 6: 30-290ms over hundreds of
+    # launches) — 48 segments keeps Orion's per-kernel admission meaningful
+    return request_kernels(get_config(arch), BE_REQ["B"], BE_REQ["S"],
+                           BE_REQ["mode"], dev, max_kernels=48)
+
+
+def make_tenants(dev, n_ls=2, n_be=1, qps=30.0, horizon=5.0, trace="poisson",
+                 ls_archs=None, be_archs=None):
+    ls_archs = ls_archs or LS_ARCHS
+    be_archs = be_archs or BE_ARCHS
+    gen = poisson_trace if trace == "poisson" else apollo_like_trace
+    tenants = []
+    for i in range(n_ls):
+        tenants.append(Tenant(f"ls{i}", "LS",
+                              ls_kernels(dev, ls_archs[i % len(ls_archs)]),
+                              arrivals=gen(qps, horizon, seed=i + 1)))
+    for j in range(n_be):
+        tenants.append(Tenant(f"be{j}", "BE",
+                              be_kernels(dev, be_archs[j % len(be_archs)]),
+                              closed_loop=True))
+    return tenants
+
+
+def run_policy(dev, policy_kind, coloring, tenants, horizon=5.0, sm_be=0.3,
+               ch_be=1 / 3):
+    sim = GPUSimulator(dev, ComputePolicy(kind=policy_kind, sm_be=sm_be),
+                       coloring=coloring, ch_be=ch_be)
+    return sim.run(tenants, horizon)
+
+
+class Rows(list):
+    def add(self, name, us_per_call, derived=""):
+        self.append((name, us_per_call, derived))
+
+    def emit(self):
+        for name, us, derived in self:
+            print(f"{name},{us:.3f},{derived}")
+
+
+def timeit(fn, *args, reps=3, **kw):
+    fn(*args, **kw)          # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    if hasattr(out, "block_until_ready"):
+        out.block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6

@@ -1,0 +1,33 @@
+"""Fig. 12 — end-to-end in-VRAM serving: 4 LS + 2 BE tenants from the
+assigned architectures under TGS(temporal) / MPS+(spatial) / Orion / SGDRC,
+Poisson and Apollo-like traces, on the V100-class and TPU-class device
+models. Paper: SGDRC cuts LS p99 up to ~50% vs Orion with up to 6.1x BE
+throughput."""
+from __future__ import annotations
+
+from repro.core.simulator import GPU_DEVICES, TPU_V5E
+
+from .common import Rows, make_tenants, run_policy
+
+HORIZON = 5.0
+POLICIES = [("temporal", False), ("spatial", False), ("orion", False),
+            ("sgdrc", True)]
+
+
+def run() -> Rows:
+    rows = Rows()
+    for devname, dev in [("tesla-v100", GPU_DEVICES["tesla-v100"]),
+                         ("tpu-v5e", TPU_V5E)]:
+        for trace in ("poisson", "apollo"):
+            for policy, coloring in POLICIES:
+                tenants = make_tenants(dev, n_ls=4, n_be=2, qps=10,
+                                       horizon=HORIZON, trace=trace)
+                res = run_policy(dev, policy, coloring, tenants, HORIZON)
+                rows.add(f"fig12/{devname}/{trace}/{policy}/ls_p99",
+                         res.ls_p99() * 1e6,
+                         f"be_thpt={res.be_throughput(8):.1f}samp/s")
+    return rows
+
+
+if __name__ == "__main__":
+    run().emit()

@@ -1,0 +1,58 @@
+"""Fig. 13 — model swapping over the interconnect: models live in host memory
+and stream in before serving. Weighted PCIe CFS (nice=1/20/10K) vs
+StreamBox-preemption vs MPS+(multi-stream) vs Orion(multi-stream, no PCIe
+control). LS latency decreases and BE throughput falls as LS nice grows —
+the weighted-fairness knob neither Baymax nor StreamBox offers."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.pcie import (BusSpec, MultiStream, PCIeCFS, StreamBox,
+                             summarize)
+from repro.core.simulator import apollo_like_trace
+from repro.serving.swap import model_bytes, swap_requests
+
+from .common import BE_ARCHS, Rows
+
+HORIZON = 30.0
+# smallest assigned archs serve LS (weights must stream within the horizon
+# even at the lowest CFS weight)
+LS_SWAP_ARCHS = ["whisper-small", "zamba2-1.2b"]
+
+
+def _workload(nice_ls):
+    reqs = []
+    rid = 0
+    for i, arch in enumerate(LS_SWAP_ARCHS):
+        arr = apollo_like_trace(0.5, HORIZON, seed=i + 1)
+        reqs += swap_requests(get_config(arch), f"ls:{arch}", "LS", nice_ls,
+                              arr, rid0=rid)
+        rid += 1_000_000
+    for j, arch in enumerate(BE_ARCHS[:2]):
+        arr = list(np.arange(0.0, HORIZON,
+                             model_bytes(get_config(arch)) / 12e9 * 2.2))
+        reqs += swap_requests(get_config(arch), f"be:{arch}", "BE", 100, arr,
+                              rid0=rid, per_layer=True)
+        rid += 1_000_000
+    return reqs
+
+
+def run() -> Rows:
+    rows = Rows()
+    bus = BusSpec()
+    scheds = [("multistream", MultiStream()), ("streambox", StreamBox()),
+              ("cfs_nice1", PCIeCFS(2048)), ("cfs_nice20", PCIeCFS(2048)),
+              ("cfs_nice10k", PCIeCFS(2048))]
+    nice_of = {"cfs_nice1": 1, "cfs_nice20": 20, "cfs_nice10k": 10_000}
+    for name, sched in scheds:
+        reqs = _workload(nice_of.get(name, 10_000))
+        comps = [c for c in sched.run(reqs, bus, "h2d") if c.t_done < HORIZON]
+        p99, thpt, per_tenant = summarize(comps)
+        rows.add(f"fig13/{name}/ls_swap_p99", p99 * 1e6,
+                 f"be_thpt={thpt/2**30:.2f}GiBps")
+    return rows
+
+
+if __name__ == "__main__":
+    run().emit()

@@ -1,0 +1,33 @@
+"""Fig. 14 — component ablation: multi-streaming baseline, + elastic SM
+multiplexing, + VRAM channel isolation (scenario #1); the PCIe CFS component
+is ablated in fig13. Paper: SM multiplexing drops LS latency drastically,
+coloring adds ~another order; BE throughput dips as isolation tightens."""
+from __future__ import annotations
+
+from repro.core.simulator import GPU_DEVICES
+
+from .common import Rows, make_tenants, run_policy
+
+HORIZON = 5.0
+
+VARIANTS = [
+    ("multistream", "multistream", False),   # no isolation (occupancy hog)
+    ("+elastic_sm", "sgdrc", False),         # SM quota + preemption only
+    ("+vram_coloring", "sgdrc", True),       # full SGDRC (scenario #1)
+]
+
+
+def run() -> Rows:
+    rows = Rows()
+    dev = GPU_DEVICES["tesla-v100"]
+    for name, policy, coloring in VARIANTS:
+        tenants = make_tenants(dev, n_ls=4, n_be=2, qps=10, horizon=HORIZON,
+                               trace="apollo")
+        res = run_policy(dev, policy, coloring, tenants, HORIZON)
+        rows.add(f"fig14/{name}/ls_p99", res.ls_p99() * 1e6,
+                 f"be_thpt={res.be_throughput(8):.1f}samp/s")
+    return rows
+
+
+if __name__ == "__main__":
+    run().emit()

@@ -1,0 +1,56 @@
+"""Fig. 4 — resource-contention micro-benchmark: a victim LS kernel colocated
+with 1..N interference tenants, measuring victim latency inflation along the
+compute (intra-SM), VRAM-bandwidth (inter-SM), and PCIe axes."""
+from __future__ import annotations
+
+from repro.core.compute import ComputePolicy
+from repro.core.pcie import (BusSpec, MultiStream, closed_loop_requests,
+                             poisson_requests, summarize)
+from repro.core.simulator import GPUSimulator, Kernel, TPU_V5E, Tenant
+
+from .common import Rows
+
+
+def run() -> Rows:
+    rows = Rows()
+    dev = TPU_V5E
+    # per-axis victims under raw multi-streaming (no isolation)
+    v_comp = [Kernel(dev.peak_flops * 0.5e-3, 1e6, False)]
+    v_mem = [Kernel(1e6, dev.hbm_bw * 0.5e-3, True)]
+    i_comp = [Kernel(dev.peak_flops * 0.5e-3, 1e6, False)]
+    i_mem = [Kernel(1e6, dev.hbm_bw * 0.5e-3, True)]
+    for kind, victim, interf in [("compute", v_comp, i_comp),
+                                 ("vram", v_mem, i_mem)]:
+        solo = GPUSimulator(dev, ComputePolicy("multistream")).run(
+            [Tenant("v", "LS", victim, arrivals=[0.0])], 1.0)
+        base = solo.tenants[0].latencies[0]
+        for n in (1, 2, 4):
+            tenants = [Tenant("v", "LS", victim, arrivals=[0.0])] + [
+                Tenant(f"i{k}", "BE", interf * 400, closed_loop=True)
+                for k in range(n)]
+            res = GPUSimulator(dev, ComputePolicy("multistream")).run(
+                tenants, 1.0)
+            lat = res.tenants[0].latencies[0]
+            rows.add(f"fig4/{kind}/x{n}/victim_latency", lat * 1e6,
+                     f"inflation={lat/base:.2f}x")
+    # PCIe axis: tiny LS copy vs N bulk streams
+    bus = BusSpec()
+    ls = poisson_requests("v", "LS", 1, qps=200, size=64 << 10,
+                          direction="h2d", horizon=0.4, seed=0)
+    solo_p99, _, _ = summarize(MultiStream().run(ls, bus, "h2d"))
+    for n in (1, 2, 4):
+        be = []
+        for k in range(n):
+            be += closed_loop_requests(f"i{k}", 1, 40 << 20, "h2d", 0.4,
+                                       est_rate=bus.bw_h2d / n,
+                                       start_rid=10_000_000 * (k + 1))
+        p99, _, _ = summarize(
+            [c for c in MultiStream().run(ls + be, bus, "h2d")
+             if c.req.priority == "LS"])
+        rows.add(f"fig4/pcie/x{n}/victim_p99", p99 * 1e6,
+                 f"inflation={p99/max(solo_p99,1e-9):.1f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    run().emit()

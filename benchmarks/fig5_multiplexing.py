@@ -1,0 +1,24 @@
+"""Fig. 5 — limitations of temporal vs spatial multiplexing: temporal keeps
+LS p99 low but starves BE; spatial lifts BE throughput but destroys LS p99."""
+from __future__ import annotations
+
+from repro.core.simulator import TPU_V5E
+
+from .common import Rows, make_tenants, run_policy
+
+HORIZON = 5.0
+
+
+def run() -> Rows:
+    rows = Rows()
+    dev = TPU_V5E
+    for policy in ("temporal", "spatial"):
+        tenants = make_tenants(dev, n_ls=2, n_be=1, qps=70, horizon=HORIZON)
+        res = run_policy(dev, policy, False, tenants, HORIZON)
+        rows.add(f"fig5/{policy}/ls_p99", res.ls_p99() * 1e6,
+                 f"be_thpt={res.be_throughput(8):.1f}samp/s")
+    return rows
+
+
+if __name__ == "__main__":
+    run().emit()

@@ -1,0 +1,27 @@
+"""Fig. 6 — interference-aware multiplexing is not a panacea: as LS
+concurrency grows, Orion keeps LS p99 flat-ish but BE throughput collapses
+(its co-execution constraints starve BE); SGDRC holds BE throughput."""
+from __future__ import annotations
+
+from repro.core.simulator import TPU_V5E
+
+from .common import Rows, make_tenants, run_policy
+
+HORIZON = 5.0
+
+
+def run() -> Rows:
+    rows = Rows()
+    dev = TPU_V5E
+    for n_ls in (1, 2, 4, 6):
+        for policy, coloring in (("orion", False), ("sgdrc", True)):
+            tenants = make_tenants(dev, n_ls=n_ls, n_be=2, qps=20,
+                                   horizon=HORIZON)
+            res = run_policy(dev, policy, coloring, tenants, HORIZON)
+            rows.add(f"fig6/{policy}/ls{n_ls}/ls_p99", res.ls_p99() * 1e6,
+                     f"be_thpt={res.be_throughput(8):.1f}samp/s")
+    return rows
+
+
+if __name__ == "__main__":
+    run().emit()

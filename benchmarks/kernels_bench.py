@@ -1,0 +1,49 @@
+"""Pallas kernel micro-bench (interpret mode on CPU — numbers are
+correctness-path costs, not TPU timings; the roofline section carries the
+TPU-side analysis)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+from .common import Rows, timeit
+
+
+def run() -> Rows:
+    rows = Rows()
+    ks = jax.random.split(jax.random.key(0), 4)
+    B, S, H, D = 1, 256, 4, 64
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, D), jnp.float32)
+    us = timeit(lambda: ops.flash_attention(q, k, v, block_q=128,
+                                            block_k=128).block_until_ready())
+    rows.add("kernels/flash_attention_256", us, f"B{B}S{S}H{H}D{D}")
+    kc = jax.random.normal(ks[1], (2, 512, 2, 64), jnp.float32)
+    vc = jax.random.normal(ks[2], (2, 512, 2, 64), jnp.float32)
+    qd = jax.random.normal(ks[0], (2, 8, 64), jnp.float32)
+    us = timeit(lambda: ops.decode_attention(
+        qd, kc, vc, jnp.asarray(300, jnp.int32)).block_until_ready())
+    rows.add("kernels/decode_attention_512", us, "B2S512")
+    arena = jax.random.normal(ks[3], (64, 512), jnp.float32)
+    spt = jnp.arange(32, dtype=jnp.int32)[::-1]
+    us = timeit(lambda: ops.spt_gather(arena, spt).block_until_ready())
+    rows.add("kernels/spt_gather_32pg", us, "pages=32x512f32")
+    a = jax.random.normal(ks[0], (256, 256), jnp.float32)
+    b = jax.random.normal(ks[1], (256, 256), jnp.float32)
+    us = timeit(lambda: ops.dual_tenant_matmul(
+        a, b, a, b, sm_be=0.3, block_m=128, block_n=128,
+        block_k=128)[0].block_until_ready())
+    rows.add("kernels/dual_tenant_matmul_256", us, "sm_be=0.3")
+    qs = jax.random.normal(ks[0], (1, 128, 2, 16), jnp.float32)
+    ws = -jnp.abs(jax.random.normal(ks[3], (1, 128, 2, 16))) * 0.1
+    us = timeit(lambda: ops.ssd_scan(qs, qs, qs, ws,
+                                     chunk=32).block_until_ready())
+    rows.add("kernels/ssd_scan_128", us, "chunk=32")
+    return rows
+
+
+if __name__ == "__main__":
+    run().emit()

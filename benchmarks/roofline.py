@@ -1,0 +1,129 @@
+"""Roofline analysis (deliverable g): derive the three roofline terms per
+(arch x shape) from the single-pod dry-run artifacts.
+
+    compute term    = HLO_FLOPs_per_dev / peak_FLOPs_per_chip
+    memory term     = HLO_bytes_per_dev / HBM_bw_per_chip
+    collective term = collective_wire_bytes_per_dev / ICI_link_bw
+
+HLO metrics come from the unrolled-probe scaling (scan bodies are counted
+once by XLA's cost analysis — see launch/dryrun.py); MODEL_FLOPS is the
+6*N*D / 2*N_active*D reference; MFU-proxy = MODEL_FLOPS_per_dev / peak /
+max(terms) is the hillclimbing objective.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+from repro.core.costmodel import model_flops_reference, param_count
+
+PEAK_FLOPS = 197e12        # bf16 / chip (TPU v5e-class)
+HBM_BW = 819e9             # bytes/s / chip
+LINK_BW = 50e9             # bytes/s / ICI link
+N_CHIPS = 256
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_cells(art_dir=ART_DIR, mesh="single", tag=""):
+    cells = {}
+    for f in glob.glob(os.path.join(art_dir, f"*__{mesh}{tag}.json")):
+        with open(f) as fh:
+            r = json.load(fh)
+        if r.get("tag", "") != tag:
+            continue
+        cells[(r["arch"], r["shape"])] = r
+    return cells
+
+
+def analyze(rec: dict) -> dict | None:
+    if not rec.get("ok") or "scaled" not in rec:
+        return None
+    arch, shape_name = rec["arch"], rec["shape"]
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    sc = rec["scaled"]
+    t_comp = sc["flops"] / PEAK_FLOPS
+    t_mem = sc["bytes_accessed"] / HBM_BW
+    t_coll = sc["collective_wire_bytes"] / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mode = "train" if shape.kind == "train" else "inference"
+    mf_global = model_flops_reference(cfg, tokens, mode)
+    mf_dev = mf_global / rec["n_devices"]
+    t_bound = max(terms.values())
+    mfu = mf_dev / PEAK_FLOPS / max(t_bound, 1e-30)
+    hlo_ratio = mf_dev / max(sc["flops"], 1e-30)
+    mem = rec["main"]["memory"]
+    return {
+        "arch": arch, "shape": shape_name, "dominant": dominant,
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "model_flops_global": mf_global, "hlo_flops_dev": sc["flops"],
+        "useful_ratio": hlo_ratio, "mfu_proxy": mfu,
+        "args_gib_dev": mem["argument_bytes"] / 2**30,
+        "temp_gib_dev": mem["temp_bytes"] / 2**30,
+        "coll_by_kind": sc.get("collective_wire_bytes_by_kind", {}),
+    }
+
+
+def suggestion(row: dict) -> str:
+    d = row["dominant"]
+    if d == "collective":
+        top = max(row["coll_by_kind"], key=row["coll_by_kind"].get) \
+            if row["coll_by_kind"] else "?"
+        return (f"cut {top} traffic: re-shard to keep the reducing operand "
+                "local / fuse the gather into consumers")
+    if d == "memory":
+        if row["useful_ratio"] < 0.5:
+            return ("HLO moves >2x the useful bytes: remove remat/replication "
+                    "waste, narrow dtypes, fuse elementwise chains")
+        return "bandwidth-bound: shrink KV/activation traffic (paging, bf16)"
+    if row["useful_ratio"] < 0.6:
+        return ("HLO flops >> model flops: redundant compute (remat or "
+                "replicated-batch execution) — fix shardings")
+    return "near compute roofline: tune block shapes / MXU utilization"
+
+
+def table(rows, f=None):
+    hdr = ("| arch | shape | t_comp(s) | t_mem(s) | t_coll(s) | dominant | "
+           "MODEL/HLO flops | MFU-proxy | args GiB/dev | temp GiB/dev | "
+           "next lever |")
+    sep = "|" + "---|" * 11
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['mfu_proxy']:.3f} | {r['args_gib_dev']:.2f} | "
+            f"{r['temp_gib_dev']:.2f} | {suggestion(r)} |")
+    out = "\n".join(lines)
+    if f:
+        f.write(out + "\n")
+    return out
+
+
+def run():
+    from .common import Rows
+    rows_out = Rows()
+    cells = load_cells()
+    analyzed = [a for a in (analyze(r) for r in cells.values()) if a]
+    analyzed.sort(key=lambda r: (r["arch"], r["shape"]))
+    os.makedirs(os.path.join(os.path.dirname(ART_DIR)), exist_ok=True)
+    with open(os.path.join(os.path.dirname(ART_DIR), "roofline.md"), "w") as f:
+        f.write("# Roofline (single-pod 16x16, per-device terms)\n\n")
+        table(analyzed, f)
+    for r in analyzed:
+        t_us = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"]) * 1e6
+        rows_out.add(f"roofline/{r['arch']}/{r['shape']}/step_bound", t_us,
+                     f"dominant={r['dominant']} mfu={r['mfu_proxy']:.3f} "
+                     f"useful={r['useful_ratio']:.2f}")
+    return rows_out
+
+
+if __name__ == "__main__":
+    print(table([a for a in map(analyze, load_cells().values()) if a]))

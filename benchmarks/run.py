@@ -1,0 +1,34 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import sys
+import time
+
+
+def main() -> None:
+    from . import (fig4_contention, fig5_multiplexing, fig6_orion,
+                   fig11_vram_isolation, fig12_invram, fig13_swapping,
+                   fig14_ablation, kernels_bench, roofline, tab3_pcie_cfs,
+                   tab_mlp_hash)
+    modules = [
+        ("fig4", fig4_contention), ("fig5", fig5_multiplexing),
+        ("fig6", fig6_orion), ("fig11", fig11_vram_isolation),
+        ("tab3", tab3_pcie_cfs), ("fig12", fig12_invram),
+        ("fig13", fig13_swapping), ("fig14", fig14_ablation),
+        ("mlp_hash", tab_mlp_hash), ("kernels", kernels_bench),
+        ("roofline", roofline),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name, mod in modules:
+        if only and only != name:
+            continue
+        t0 = time.time()
+        try:
+            rows = mod.run()
+            rows.emit()
+        except Exception as e:  # keep the harness going; surface the failure
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}")
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == '__main__':
+    main()

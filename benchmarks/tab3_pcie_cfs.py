@@ -1,0 +1,41 @@
+"""Tab. 3 — PCIe CFS vs BayMax vs StreamBox micro-benchmark: LS copy p99 and
+BE copy throughput across (QPS, size, direction), plus the §6.3 cfs_period
+auto-tune result (paper: 2048 packets on PCIe 3.0 x16)."""
+from __future__ import annotations
+
+from repro.core.pcie import (Baymax, BusSpec, MultiStream, PCIeCFS, StreamBox,
+                             autotune_cfs_period, closed_loop_requests,
+                             poisson_requests, summarize)
+
+from .common import Rows
+
+HORIZON = 0.5
+
+
+def run() -> Rows:
+    rows = Rows()
+    bus = BusSpec()
+    schedulers = [("baymax", Baymax()), ("streambox", StreamBox()),
+                  ("cfs", PCIeCFS(2048))]
+    for direction in ("h2d", "d2h"):
+        for qps, size in [(100, 4 << 10), (1000, 4 << 10),
+                          (100, 2 << 20), (1000, 2 << 20)]:
+            ls = poisson_requests("ls0", "LS", 10_000, qps=qps, size=size,
+                                  direction=direction, horizon=HORIZON, seed=1)
+            be = closed_loop_requests("be0", nice=1, size=40 << 20,
+                                      direction=direction, horizon=HORIZON,
+                                      est_rate=12e9)
+            for name, sched in schedulers:
+                comps = [c for c in sched.run(ls + be, bus, direction)
+                         if c.t_done < HORIZON]
+                p99, thpt, _ = summarize(comps)
+                rows.add(f"tab3/{direction}/qps{qps}/sz{size}/{name}/ls_p99",
+                         p99 * 1e6, f"be_thpt={thpt/2**30:.2f}GiBps")
+    period = autotune_cfs_period(bus)
+    rows.add("tab3/autotune/cfs_period_packets", float(period),
+             "paper=2048_on_pcie3x16")
+    return rows
+
+
+if __name__ == "__main__":
+    run().emit()

@@ -1,0 +1,47 @@
+"""Model-swapping scenario (paper §8.4): models live in host memory and
+stream over the interconnect before serving; compare PCIe schedulers and
+show the CFS nice-weight knob trading LS latency vs BE throughput.
+
+Run:  PYTHONPATH=src python examples/swap_serving.py
+"""
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.pcie import (BusSpec, MultiStream, PCIeCFS, StreamBox,
+                             summarize)
+from repro.core.simulator import TPU_V5E, apollo_like_trace
+from repro.serving.swap import (model_bytes, pipelined_serve_time,
+                                swap_requests)
+
+HORIZON = 8.0
+bus = BusSpec()
+ls_archs = ["qwen3-1.7b", "stablelm-1.6b"]
+be_archs = ["gemma2-9b"]
+
+for arch in ls_archs + be_archs:
+    mb = model_bytes(get_config(arch)) / 2**30
+    t = pipelined_serve_time(get_config(arch), 1, 128, "prefill", TPU_V5E,
+                             bus.bw_h2d)
+    print(f"{arch:<18s} weights {mb:5.2f} GiB, cold-serve "
+          f"(PipeSwitch overlap) {t*1e3:7.1f} ms")
+
+print(f"\n{'scheduler':<14s} {'LS swap p99 (ms)':>17s} {'BE thpt':>10s}")
+for name, sched, nice in [("multistream", MultiStream(), 1),
+                          ("streambox", StreamBox(), 1),
+                          ("cfs nice=1", PCIeCFS(2048), 1),
+                          ("cfs nice=20", PCIeCFS(2048), 20),
+                          ("cfs nice=10K", PCIeCFS(2048), 10_000)]:
+    reqs, rid = [], 0
+    for i, arch in enumerate(ls_archs):
+        arr = apollo_like_trace(1.5, HORIZON, seed=i + 1)
+        reqs += swap_requests(get_config(arch), f"ls:{arch}", "LS", nice, arr,
+                              rid0=rid)
+        rid += 100_000
+    for arch in be_archs:
+        arr = list(np.arange(0.0, HORIZON, 0.8))
+        reqs += swap_requests(get_config(arch), f"be:{arch}", "BE", 100, arr,
+                              rid0=rid)
+        rid += 100_000
+    comps = [c for c in sched.run(reqs, bus, "h2d") if c.t_done < HORIZON]
+    p99, thpt, _ = summarize(comps)
+    print(f"{name:<14s} {p99*1e3:>17.1f} {thpt/2**30:>8.2f}GiB/s")

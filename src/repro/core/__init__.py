@@ -1,0 +1,12 @@
+# The paper's primary contribution: software-defined dynamic resource control
+# for concurrent DNN inference (SGDRC / Missile) — tenancy, elastic compute
+# multiplexing, VRAM-channel coloring (reverse engineering + MLP hash fit +
+# colored allocator + SPT), PCIe completely fair scheduling, the contention
+# simulator, and the resource controller.
+from . import coloring, compute, controller, costmodel, pcie, simulator, tenancy
+from .compute import ComputePolicy, ElasticMeshPartitioner
+from .controller import ResourcePlan, grid_search, memory_bound_ops
+from .simulator import (DeviceSpec, GPU_DEVICES, GPUSimulator, Kernel,
+                        SimResult, TPU_V5E, Tenant, apollo_like_trace,
+                        poisson_trace, request_kernels)
+from .tenancy import TenantRegistry, TenantSpec

@@ -1,0 +1,9 @@
+from .hashmaps import GPU_SPECS, PermutationHash, XorHash, gpu_hash_model
+from .device_model import VRAMDevice
+from .reveng import (RevEngResult, build_channel_representatives,
+                     collect_samples, find_cache_conflict_addrs,
+                     is_cacheline_evicted, is_channel_conflicted,
+                     mark_channel, measure_granularity)
+from .mlp_fit import FitResult, fit_channel_hash, page_bits
+from .allocator import (Allocation, ColoredArena, OutOfColoredMemory,
+                        split_channels)

@@ -1,0 +1,106 @@
+"""Colored arena allocator + shadow page tables (§5.3).
+
+A flat device arena (one big buffer) is partitioned into pages of the
+coloring granularity; each page's channel comes from the (fitted) hash model.
+A tenant is bound to a channel set; its tensors are allocated on pages of
+those channels only, and accessed through a shadow page table (SPT): a
+logical-page -> arena-page indirection consumed by the SPT gather/scatter
+kernels (repro.kernels.spt_gather). Mispredicted channel ids (the MLP's
+<0.1%) merely place a page off-color — functionally harmless, which the
+isolation benchmark quantifies.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import numpy as np
+
+
+@dataclass
+class Allocation:
+    name: str
+    nbytes: int
+    granularity: int
+    spt: np.ndarray            # [n_pages] arena page indices (int32)
+    channels: tuple
+
+    @property
+    def n_pages(self) -> int:
+        return len(self.spt)
+
+
+class OutOfColoredMemory(RuntimeError):
+    pass
+
+
+class ColoredArena:
+    """Manages a flat arena of ``total_bytes`` split into granularity pages,
+    with per-channel free lists."""
+
+    def __init__(self, total_bytes: int, channel_of_page,
+                 num_channels: int, granularity: int = 1024):
+        self.total_bytes = total_bytes
+        self.granularity = granularity
+        self.num_channels = num_channels
+        n_pages = total_bytes // granularity
+        pages = np.arange(n_pages, dtype=np.int64)
+        chan = np.asarray(channel_of_page(pages * granularity), np.int64)
+        assert chan.shape == (n_pages,)
+        self.page_channel = chan
+        self.free: list[list[int]] = [
+            list(np.nonzero(chan == c)[0][::-1]) for c in range(num_channels)]
+        self.allocations: dict[str, Allocation] = {}
+
+    # ------------------------------------------------------------------
+    def free_pages(self, channels: Sequence[int]) -> int:
+        return sum(len(self.free[c]) for c in channels)
+
+    def alloc(self, name: str, nbytes: int,
+              channels: Sequence[int]) -> Allocation:
+        """Allocate nbytes striped round-robin across the channel set (to
+        preserve intra-tenant bandwidth parallelism)."""
+        assert name not in self.allocations, name
+        n_pages = -(-nbytes // self.granularity)
+        if self.free_pages(channels) < n_pages:
+            raise OutOfColoredMemory(
+                f"{name}: need {n_pages} pages on channels {tuple(channels)}")
+        spt = np.empty(n_pages, np.int32)
+        ci = 0
+        chans = list(channels)
+        for i in range(n_pages):
+            for _ in range(len(chans)):
+                c = chans[ci % len(chans)]
+                ci += 1
+                if self.free[c]:
+                    spt[i] = self.free[c].pop()
+                    break
+        a = Allocation(name, nbytes, self.granularity, spt, tuple(channels))
+        self.allocations[name] = a
+        return a
+
+    def release(self, name: str):
+        a = self.allocations.pop(name)
+        for pg in a.spt:
+            self.free[self.page_channel[pg]].append(int(pg))
+
+    # ------------------------------------------------------------------
+    def channel_histogram(self, alloc: Allocation) -> np.ndarray:
+        return np.bincount(self.page_channel[alloc.spt],
+                           minlength=self.num_channels)
+
+    def isolation_violations(self, alloc: Allocation) -> int:
+        """Pages that landed off-color (0 with a perfect hash model; a few
+        with MLP mispredictions)."""
+        ch = self.page_channel[alloc.spt]
+        return int(np.sum(~np.isin(ch, alloc.channels)))
+
+
+def split_channels(num_channels: int, ch_be: float) -> tuple[tuple, tuple]:
+    """Paper §5.3: LS tenants get (1 - Ch_BE), BE tenants get Ch_BE of the
+    channels."""
+    n_be = max(1, int(round(num_channels * ch_be)))
+    n_be = min(n_be, num_channels - 1)
+    be = tuple(range(num_channels - n_be, num_channels))
+    ls = tuple(range(num_channels - n_be))
+    return ls, be

@@ -1,0 +1,110 @@
+"""Offline MLP fit of the VRAM channel hash mapping (§5.2): the paper trains
+a 9-layer MLP on ~15K probed (address -> channel) samples and reports >99.9%
+accuracy on unseen physical addresses. Pure-JAX implementation.
+
+Input features: binary bits of the page index (granularity-aligned), which is
+what the hash actually consumes. The fitted model generalizes to the whole
+VRAM space; prediction errors are randomly scattered (paper §8.1.1), which the
+allocator tolerates.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def page_bits(addrs, granularity: int, n_bits: int = 24) -> np.ndarray:
+    pages = np.asarray(addrs, np.int64) // granularity
+    bits = ((pages[:, None] >> np.arange(n_bits)[None, :]) & 1)
+    return (bits.astype(np.float32) * 2.0 - 1.0)
+
+
+def init_mlp(key, n_bits: int, n_channels: int, hidden: int = 256,
+             depth: int = 9):
+    dims = [n_bits] + [hidden] * (depth - 1) + [n_channels]
+    params = []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        key, sub = jax.random.split(key)
+        params.append({"w": jax.random.normal(sub, (a, b)) * (2.0 / a) ** 0.5,
+                       "b": jnp.zeros((b,))})
+    return params
+
+
+def mlp_apply(params, x):
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i + 1 < len(params):
+            x = jax.nn.gelu(x)
+    return x
+
+
+@dataclass
+class FitResult:
+    params: list
+    train_acc: float
+    test_acc: float
+    predict: Callable     # np addresses -> np channel ids
+    n_bits: int
+
+
+def fit_channel_hash(addrs, labels, granularity: int, n_channels: int,
+                     *, n_bits: int = 24, hidden: int = 256, depth: int = 9,
+                     steps: int = 3000, batch: int = 1024, lr: float = 1e-3,
+                     test_frac: float = 0.2, seed: int = 0) -> FitResult:
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(len(addrs))
+    n_test = max(1, int(len(addrs) * test_frac))
+    test_idx, train_idx = order[:n_test], order[n_test:]
+    X = page_bits(addrs, granularity, n_bits)
+    y = np.asarray(labels, np.int32)
+    Xtr, ytr = jnp.asarray(X[train_idx]), jnp.asarray(y[train_idx])
+    Xte, yte = jnp.asarray(X[test_idx]), jnp.asarray(y[test_idx])
+
+    params = init_mlp(jax.random.key(seed), n_bits, n_channels, hidden, depth)
+    opt = jax.tree.map(lambda p: {"m": jnp.zeros_like(p), "v": jnp.zeros_like(p)},
+                       params)
+
+    def loss(params, xb, yb):
+        logits = mlp_apply(params, xb)
+        return jnp.mean(-jax.nn.log_softmax(logits)[jnp.arange(len(yb)), yb])
+
+    @jax.jit
+    def step(params, opt, key, t):
+        idx = jax.random.randint(key, (batch,), 0, Xtr.shape[0])
+        g = jax.grad(loss)(params, Xtr[idx], ytr[idx])
+
+        def upd(p, o, g):
+            m = 0.9 * o["m"] + 0.1 * g
+            v = 0.999 * o["v"] + 0.001 * g * g
+            mh = m / (1 - 0.9 ** t)
+            vh = v / (1 - 0.999 ** t)
+            return p - lr * mh / (jnp.sqrt(vh) + 1e-8), {"m": m, "v": v}
+
+        flat_p, td = jax.tree.flatten(params)
+        flat_o = jax.tree.leaves(opt, is_leaf=lambda x: isinstance(x, dict) and "m" in x)
+        new = [upd(p, o, gg) for p, o, gg in
+               zip(flat_p, flat_o, jax.tree.leaves(g))]
+        return (jax.tree.unflatten(td, [n[0] for n in new]),
+                jax.tree.unflatten(td, [n[1] for n in new]))
+
+    key = jax.random.key(seed + 1)
+    for t in range(1, steps + 1):
+        key, sub = jax.random.split(key)
+        params, opt = step(params, opt, sub, t)
+
+    @jax.jit
+    def acc(params, xb, yb):
+        return jnp.mean(jnp.argmax(mlp_apply(params, xb), -1) == yb)
+
+    train_acc = float(acc(params, Xtr, ytr))
+    test_acc = float(acc(params, Xte, yte))
+
+    def predict(addrs_np):
+        xb = jnp.asarray(page_bits(addrs_np, granularity, n_bits))
+        return np.asarray(jnp.argmax(mlp_apply(params, xb), -1))
+
+    return FitResult(params, train_acc, test_acc, predict, n_bits)

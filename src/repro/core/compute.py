@@ -1,0 +1,81 @@
+"""Elastic compute multiplexing (§4, Fig. 8) — the TPU adaptation of the
+paper's elastic SM multiplexing.
+
+On GPU the mechanism is TPC masking (libsmctrl): a co-executing BE kernel may
+use at most SM_BE% of TPCs, LS kernels preempt BE-occupied SMs (FLEP), and
+idle LS partitions are lent to BE. On TPU a chip is one MXU, so the analogous
+partitioning axes are (a) across-chip sub-meshes and (b) bounded tile quanta
+within a chip (a BE kernel yields at tile-grid boundaries — see
+kernels/dual_tenant_matmul for the grid-level SM_BE split).
+
+This module is the *policy*: given who is running, what compute fraction does
+each tenant's kernel get, and what preemption latency does an arriving LS
+kernel pay. The contention simulator executes the policy.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class ComputePolicy:
+    kind: str = "sgdrc"        # sgdrc | temporal | spatial | orion
+    sm_be: float = 0.30        # BE compute fraction while LS is active (§5.3)
+    tile_quantum_s: float = 25e-6   # BE preemption granularity (one tile)
+    ctx_switch_s: float = 1e-3      # temporal-multiplexing context switch
+    mps_split: float = 0.5          # MPS+ static halves
+
+    def alloc(self, ls_active: bool, be_active: bool):
+        """Returns (ls_frac, be_frac) of compute while both classes have
+        runnable kernels; either may be 0 when idle. The "multistream" kind
+        returns (-1,-1): occupancy-proportional sharing (big BE kernels hog
+        SMs — no isolation at all), resolved by the simulator."""
+        if self.kind == "multistream":
+            if ls_active and be_active:
+                return (-1.0, -1.0)
+            return (1.0 if ls_active else 0.0, 1.0 if be_active else 0.0)
+        if self.kind == "temporal":
+            # exclusive execution; arbitration handled by the simulator
+            return (1.0, 0.0) if ls_active else (0.0, 1.0)
+        if self.kind == "spatial":
+            if ls_active and be_active:
+                return (self.mps_split, self.mps_split)
+            return (1.0 if ls_active else 0.0, 1.0 if be_active else 0.0)
+        if self.kind == "orion":
+            # co-execution permitted only for "compatible" BE kernels; the
+            # simulator gates BE admission — when admitted, BE runs unmasked
+            if ls_active and be_active:
+                return (1.0, 1.0)
+            return (1.0 if ls_active else 0.0, 1.0 if be_active else 0.0)
+        # sgdrc: BE masked to sm_be% of partitions while LS is active (LS
+        # keeps the remainder); elastic lending when either side idles
+        if ls_active and be_active:
+            return (1.0 - self.sm_be, self.sm_be)
+        return (1.0 if ls_active else 0.0, 1.0 if be_active else 0.0)
+
+    def preemption_delay(self, be_running: bool) -> float:
+        """Extra latency an arriving LS kernel pays before its resources are
+        available."""
+        if self.kind == "temporal":
+            return self.ctx_switch_s if be_running else 0.0
+        if self.kind == "sgdrc":
+            return self.tile_quantum_s if be_running else 0.0
+        return 0.0
+
+
+@dataclass
+class ElasticMeshPartitioner:
+    """Pod-level spatial isolation: assign disjoint sub-mesh slices to
+    tenants; resize online as LS load changes (the across-chip face of
+    elastic multiplexing; used by the serving engine at pod scale)."""
+    total_chips: int
+    min_ls: int = 1
+    assignments: dict = field(default_factory=dict)
+
+    def rebalance(self, ls_demand: float):
+        """ls_demand in [0,1] -> chips for LS, remainder lent to BE."""
+        ls_chips = max(self.min_ls,
+                       min(self.total_chips - 1,
+                           round(ls_demand * self.total_chips)))
+        self.assignments = {"LS": ls_chips, "BE": self.total_chips - ls_chips}
+        return dict(self.assignments)

@@ -1,0 +1,100 @@
+"""SGDRC controller (§5.3 + §4 offline phase):
+
+  * profiles a model's ops with the analytic cost model and marks
+    memory-bound tensors for isolation (DRAM throughput > Thres_DRAM%),
+  * grid-searches (SM_BE, Ch_BE, Thres_DRAM) maximizing BE resource grants
+    subject to LS kernel latency inflation <= 25% vs running alone (the
+    paper's constraint; their search lands at SM_BE=30, Ch_BE=1/3,
+    Thres_DRAM=40),
+  * emits a ResourcePlan consumed by the serving engine (channel splits for
+    the colored allocator, SM quota for the compute policy, nice weights for
+    the PCIe CFS).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import List, Sequence
+
+import numpy as np
+
+from .compute import ComputePolicy
+from .costmodel import model_costs
+from .simulator import DeviceSpec, GPUSimulator, Kernel, Tenant, request_kernels
+from ..configs.base import ModelConfig
+
+
+@dataclass
+class ResourcePlan:
+    sm_be: float
+    ch_be: float
+    thres_dram: float
+    ls_channels: tuple
+    be_channels: tuple
+    max_ls_inflation: float
+
+
+def memory_bound_ops(cfg: ModelConfig, B: int, S: int, mode: str,
+                     dev: DeviceSpec, thres_dram: float) -> List[str]:
+    """Ops whose DRAM throughput exceeds thres_dram% of peak when run alone
+    (Nsight-Compute analogue). These get SPT-colored tensors."""
+    out = []
+    for op in model_costs(cfg, B, S, mode):
+        t = max(op.flops / dev.peak_flops, op.bytes / dev.hbm_bw)
+        dram_util = (op.bytes / dev.hbm_bw) / max(t, 1e-12)
+        if dram_util > thres_dram:
+            out.append(op.name)
+    return out
+
+
+def _pair_inflation(dev: DeviceSpec, ls_k: Kernel, be_k: Kernel,
+                    sm_be: float, ch_be: float) -> float:
+    """LS kernel latency inflation when co-executed with a BE kernel under
+    the candidate setting (coloring on)."""
+    solo = max(ls_k.flops / dev.peak_flops, ls_k.bytes / dev.hbm_bw)
+    sim = GPUSimulator(dev, ComputePolicy(kind="sgdrc", sm_be=sm_be),
+                       coloring=True, ch_be=ch_be)
+    res = sim.run([Tenant("ls", "LS", [ls_k], arrivals=[0.0]),
+                   Tenant("be", "BE", [be_k], arrivals=[0.0])], horizon=10.0)
+    lat = res.tenants[0].latencies
+    return (lat[0] / solo) if lat else float("inf")
+
+
+def grid_search(dev: DeviceSpec, ls_cfgs: Sequence[ModelConfig],
+                be_cfgs: Sequence[ModelConfig], *,
+                max_inflation: float = 1.25,
+                sm_grid=(0.1, 0.2, 0.3, 0.4, 0.5),
+                ch_grid=(1 / 6, 1 / 4, 1 / 3, 1 / 2),
+                thres_grid=(0.2, 0.4, 0.6),
+                pairs_per_model: int = 6, seed: int = 0) -> ResourcePlan:
+    rng = np.random.default_rng(seed)
+    ls_pool = [k for cfg in ls_cfgs
+               for k in request_kernels(cfg, 1, 128, "prefill", dev)]
+    be_pool = [k for cfg in be_cfgs
+               for k in request_kernels(cfg, 8, 256, "prefill", dev)]
+    n = min(len(ls_pool) * len(be_pool),
+            pairs_per_model * len(ls_cfgs) * len(be_cfgs))
+    pairs = [(ls_pool[rng.integers(len(ls_pool))],
+              be_pool[rng.integers(len(be_pool))]) for _ in range(n)]
+
+    best, best_score = None, -1.0
+    for sm_be, ch_be, thres in itertools.product(sm_grid, ch_grid, thres_grid):
+        worst = max(_pair_inflation(dev, lk, bk, sm_be, ch_be)
+                    for lk, bk in pairs)
+        if worst <= max_inflation:
+            score = sm_be + ch_be + thres   # paper: maximize all three
+            if score > best_score:
+                best_score = score
+                best = (sm_be, ch_be, thres, worst)
+    if best is None:   # fall back to the most conservative point
+        sm_be, ch_be, thres = min(sm_grid), min(ch_grid), min(thres_grid)
+        worst = max(_pair_inflation(dev, lk, bk, sm_be, ch_be)
+                    for lk, bk in pairs)
+        best = (sm_be, ch_be, thres, worst)
+    sm_be, ch_be, thres, worst = best
+    n_be = max(1, int(round(dev.num_channels * ch_be)))
+    return ResourcePlan(
+        sm_be=sm_be, ch_be=ch_be, thres_dram=thres,
+        ls_channels=tuple(range(dev.num_channels - n_be)),
+        be_channels=tuple(range(dev.num_channels - n_be, dev.num_channels)),
+        max_ls_inflation=worst)

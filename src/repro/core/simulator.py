@@ -1,0 +1,300 @@
+"""Discrete-event contention simulator for a shared accelerator.
+
+Reproduces the paper's end-to-end scenarios (Figs. 5/6/11/12/14) with the
+assigned architectures as workloads: LS/BE tenants submit inference requests;
+each request is a sequence of kernels whose (flops, bytes) come from the
+analytic cost model; co-executing kernels contend for compute partitions
+(ComputePolicy — temporal / spatial(MPS+) / interference-aware(Orion) /
+SGDRC elastic) and for VRAM-channel bandwidth (uncolored: demand-proportional
+sharing + L2-thrashing penalty between classes; colored: hard Ch_BE split, no
+cross-class thrashing, +SPT overhead on memory-bound kernels).
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .compute import ComputePolicy
+from .costmodel import model_costs
+from ..configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class DeviceSpec:
+    name: str
+    peak_flops: float
+    hbm_bw: float
+    num_channels: int
+    thrash: float = 1.45       # cross-class L2/DRAM interference multiplier
+
+
+TPU_V5E = DeviceSpec("tpu-v5e", 197e12, 819e9, 16)
+GPU_DEVICES = {
+    "tesla-p40": DeviceSpec("tesla-p40", 11.8e12, 346e9, 12, 1.35),
+    "tesla-v100": DeviceSpec("tesla-v100", 112e12, 897e9, 32, 1.5),
+    "rtx-a2000": DeviceSpec("rtx-a2000", 32e12, 360e9, 6, 1.55),
+    "rtx-a5500": DeviceSpec("rtx-a5500", 88e12, 768e9, 12, 1.7),
+    "tpu-v5e": TPU_V5E,
+}
+
+
+@dataclass
+class Kernel:
+    flops: float
+    bytes: float
+    memory_bound: bool
+
+
+def request_kernels(cfg: ModelConfig, B: int, S: int, mode: str,
+                    dev: DeviceSpec, max_kernels: int = 24) -> List[Kernel]:
+    ops = model_costs(cfg, B, S, mode)
+    per = max(1, len(ops) // max_kernels)
+    out: List[Kernel] = []
+    for i in range(0, len(ops), per):
+        chunk = ops[i:i + per]
+        f = sum(o.flops for o in chunk)
+        b = sum(o.bytes for o in chunk)
+        out.append(Kernel(f, b, b / dev.hbm_bw > f / dev.peak_flops))
+    return out
+
+
+@dataclass
+class Tenant:
+    name: str
+    priority: str              # LS | BE
+    kernels: List[Kernel]      # one request's kernel sequence
+    arrivals: Optional[List[float]] = None   # LS: request arrival times
+    closed_loop: bool = False  # BE: always another request
+    # runtime state
+    queue: List[float] = field(default_factory=list)
+    k_idx: int = 0
+    cur_started: float = 0.0
+    cur_remaining: float = 1.0   # fraction of current kernel left
+    active_since: Optional[float] = None
+    suspended: bool = False      # temporal multiplexing: preempted mid-request
+    latencies: List[float] = field(default_factory=list)
+    completed: int = 0
+
+    @property
+    def is_ls(self):
+        return self.priority == "LS"
+
+
+class GPUSimulator:
+    def __init__(self, dev: DeviceSpec, policy: ComputePolicy,
+                 coloring: bool = False, ch_be: float = 1 / 3,
+                 spt_overhead: float = 0.007, pcie_coupled=None):
+        self.dev = dev
+        self.policy = policy
+        self.coloring = coloring
+        self.ch_be = ch_be
+        self.spt_overhead = spt_overhead
+
+    # ------------------------------------------------------------------
+    def _admit_orion(self, k: Kernel, n_ls_active: int) -> bool:
+        """Interference-aware admission (Orion-style): a BE kernel may
+        co-execute with LS work only if it is (a) not memory-bound (no DRAM
+        contention with LS) and (b) short enough to fit the LS latency budget
+        — the paper reports 83.4% of BE kernels carry >=1 such constraint,
+        and the budget tightens as LS concurrency grows (Fig. 6)."""
+        if n_ls_active == 0:
+            return True
+        if k.memory_bound:
+            return False
+        dur = max(k.flops / self.dev.peak_flops, k.bytes / self.dev.hbm_bw)
+        return dur < 4e-3 / n_ls_active
+
+    def _rates(self, running: List[Tenant]):
+        """Per-tenant kernel duration at the current co-execution state."""
+        ls = [t for t in running if t.is_ls]
+        be = [t for t in running if not t.is_ls]
+        ls_f, be_f = self.policy.alloc(bool(ls), bool(be))
+        out: Dict[str, float] = {}
+        # occupancy-proportional SM sharing (multistream, no isolation)
+        occ = None
+        if ls_f < 0:
+            flops = {t.name: max(t.kernels[t.k_idx].flops, 1.0)
+                     for t in running}
+            tot = sum(flops.values())
+            occ = {n: f / tot for n, f in flops.items()}
+        # bandwidth split
+        demands = {t.name: t.kernels[t.k_idx].bytes for t in running}
+        tot_dem = sum(demands.values()) or 1.0
+        for t in running:
+            k = t.kernels[t.k_idx]
+            if occ is not None:
+                sm = occ[t.name]
+            else:
+                sm = (ls_f / max(len(ls), 1)) if t.is_ls else \
+                    (be_f / max(len(be), 1))
+            sm = max(sm, 1e-6)
+            if self.coloring:
+                share = (1 - self.ch_be) if t.is_ls else self.ch_be
+                bw = self.dev.hbm_bw * share / max(
+                    len(ls) if t.is_ls else len(be), 1)
+                thrash = 1.0
+                spt = 1.0 + (self.spt_overhead if k.memory_bound else 0.0)
+            else:
+                bw = self.dev.hbm_bw * demands[t.name] / tot_dem
+                cross = (ls and be)
+                thrash = (self.dev.thrash
+                          if (cross and k.memory_bound) else 1.0)
+                spt = 1.0
+            dur = max(k.flops / (self.dev.peak_flops * sm),
+                      k.bytes / max(bw, 1.0)) * thrash * spt
+            out[t.name] = max(dur, 1e-9)
+        return out
+
+    # ------------------------------------------------------------------
+    def run(self, tenants: List[Tenant], horizon: float):
+        t = 0.0
+        for tn in tenants:
+            tn.queue = list(tn.arrivals or [])
+            if tn.closed_loop:
+                tn.queue = [0.0]
+            tn.k_idx, tn.active_since, tn.suspended = 0, None, False
+            tn.cur_remaining = 1.0
+            tn.latencies, tn.completed = [], 0
+
+        def eligible(tn, now):
+            return tn.suspended or (tn.queue and tn.queue[0] <= now)
+
+        def start(tn, now, delay):
+            if tn.suspended:
+                tn.suspended = False
+            else:
+                tn.cur_started = tn.queue.pop(0)
+                tn.k_idx = 0
+                tn.cur_remaining = 1.0
+            tn.active_since = now + delay
+
+        def admit(now):
+            active = [x for x in tenants if x.active_since is not None]
+            if self.policy.kind == "temporal":
+                if active:
+                    return
+                cands = [x for x in tenants if eligible(x, now)]
+                if cands:
+                    cands.sort(key=lambda x: not x.is_ls)
+                    start(cands[0], now, self.policy.ctx_switch_s)
+                return
+            n_ls = sum(1 for x in active if x.is_ls)
+            for tn in tenants:
+                if tn.active_since is not None or not eligible(tn, now):
+                    continue
+                k0 = tn.kernels[tn.k_idx if tn.suspended else 0]
+                if (self.policy.kind == "orion" and not tn.is_ls
+                        and not self._admit_orion(k0, n_ls)):
+                    continue
+                delay = (self.policy.preemption_delay(True)
+                         if tn.is_ls and any(not x.is_ls for x in active)
+                         else 0.0)
+                start(tn, now, delay)
+                if tn.is_ls:
+                    n_ls += 1
+
+        while t < horizon:
+            admit(t)
+            running = [tn for tn in tenants
+                       if tn.active_since is not None and tn.active_since <= t]
+            pending_act = [tn.active_since for tn in tenants
+                           if tn.active_since is not None and tn.active_since > t]
+            if not running:
+                nxt = pending_act + [tn.queue[0] for tn in tenants
+                                     if tn.queue and tn.queue[0] > t]
+                if not nxt:
+                    break
+                t = min(nxt)
+                continue
+            durs = self._rates(running)
+            dt = min(tn.cur_remaining * durs[tn.name] for tn in running)
+            arr = [tn.queue[0] - t for tn in tenants
+                   if tn.queue and tn.active_since is None] + \
+                  [a - t for a in pending_act]
+            arr = [a for a in arr if a > 1e-12]   # only future events
+            if arr:
+                dt = min(dt, min(arr))
+            dt = min(dt, horizon - t + 1e-9)
+            for tn in running:
+                tn.cur_remaining -= dt / durs[tn.name]
+            t += dt
+            ls_waiting = any(tn.is_ls and eligible(tn, t) for tn in tenants)
+            n_ls_now = sum(1 for x in tenants
+                           if x.is_ls and x.active_since is not None)
+            for tn in running:
+                if tn.cur_remaining <= 1e-9:
+                    tn.k_idx += 1
+                    tn.cur_remaining = 1.0
+                    if tn.k_idx >= len(tn.kernels):
+                        tn.latencies.append(t - tn.cur_started)
+                        tn.completed += 1
+                        tn.active_since = None
+                        tn.k_idx = 0
+                        if tn.closed_loop:
+                            tn.queue.append(t)
+                    elif (self.policy.kind == "temporal" and not tn.is_ls
+                          and ls_waiting):
+                        tn.active_since = None     # yield at kernel boundary
+                        tn.suspended = True
+                    elif (self.policy.kind == "orion" and not tn.is_ls
+                          and not self._admit_orion(tn.kernels[tn.k_idx],
+                                                    n_ls_now + ls_waiting)):
+                        # kernel-granularity re-admission: the next BE kernel
+                        # violates a co-execution constraint -> yield
+                        tn.active_since = None
+                        tn.suspended = True
+        return SimResult(tenants, min(t, horizon))
+
+
+@dataclass
+class SimResult:
+    tenants: List[Tenant]
+    horizon: float
+
+    def ls_p99(self) -> float:
+        lat = [l for tn in self.tenants if tn.is_ls for l in tn.latencies]
+        return float(np.percentile(lat, 99)) if lat else float("nan")
+
+    def ls_p99_of(self, name) -> float:
+        tn = next(x for x in self.tenants if x.name == name)
+        return (float(np.percentile(tn.latencies, 99))
+                if tn.latencies else float("nan"))
+
+    def be_throughput(self, batch: int = 1) -> float:
+        done = sum(tn.completed for tn in self.tenants if not tn.is_ls)
+        return done * batch / max(self.horizon, 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# arrival traces
+# ---------------------------------------------------------------------------
+
+def poisson_trace(qps: float, horizon: float, seed: int = 0) -> List[float]:
+    rng = np.random.default_rng(seed)
+    out, t = [], 0.0
+    while True:
+        t += rng.exponential(1.0 / qps)
+        if t >= horizon:
+            return out
+        out.append(t)
+
+
+def apollo_like_trace(qps: float, horizon: float, seed: int = 0,
+                      burstiness: float = 4.0) -> List[float]:
+    """Bursty autonomous-driving-style trace: ON/OFF bursts with rate
+    burstiness*qps during ON periods (Apollo trace stand-in)."""
+    rng = np.random.default_rng(seed)
+    out, t = [], 0.0
+    while t < horizon:
+        on = rng.exponential(0.05)
+        end = min(t + on, horizon)
+        while True:
+            t += rng.exponential(1.0 / (qps * burstiness))
+            if t >= end:
+                break
+            out.append(t)
+        t = end + rng.exponential(0.05 * (burstiness - 1.0))
+    return out

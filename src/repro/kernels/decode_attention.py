@@ -1,0 +1,89 @@
+"""Flash-decode (TPU Pallas): one-new-token GQA attention against a KV cache,
+with valid-length masking from a scalar-prefetched position.
+
+Grid: (batch, kv_heads, num_kv_blocks); the kv axis is sequential and carries
+(m, l, acc) scratch sized [group, D] — all query heads of one KV head are
+processed together (the MXU-friendly GQA decode layout).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, block_k):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # [G, D]
+    k = k_ref[0, 0].astype(jnp.float32)                  # [bk, D]
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # [G, bk]
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(k_pos <= pos_ref[0], s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _fin():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, block_k=128,
+                     interpret=False):
+    """q: [B,H,D] (one new token); caches: [B,Smax,Hkv,D]; pos: scalar int32.
+    Returns [B,H,D]."""
+    B, H, D = q.shape
+    Smax, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    block_k = min(block_k, Smax)
+    assert Smax % block_k == 0
+    qg = q.reshape(B, Hkv, G, D)
+    kt = k_cache.transpose(0, 2, 1, 3)                   # [B,Hkv,S,D]
+    vt = v_cache.transpose(0, 2, 1, 3)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape((1,))
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=D ** -0.5, block_k=block_k),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, Hkv, Smax // block_k),
+            in_specs=[
+                pl.BlockSpec((1, 1, G, D), lambda b, h, j, pos: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, block_k, D),
+                             lambda b, h, j, pos: (b, h, j, 0)),
+                pl.BlockSpec((1, 1, block_k, D),
+                             lambda b, h, j, pos: (b, h, j, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, D),
+                                   lambda b, h, j, pos: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, D), jnp.float32),
+            ]),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(pos_arr, qg, kt, vt)
+    return out.reshape(B, H, D)

@@ -1,0 +1,63 @@
+"""Jitted public wrappers for the Pallas kernels. On CPU hosts (tests, this
+container) kernels execute in interpret mode; on TPU they compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .flash_attention import flash_attention as _flash
+from .decode_attention import decode_attention as _decode
+from .spt_gather import spt_gather as _gather, spt_scatter as _scatter
+from .dual_tenant_matmul import dual_tenant_matmul as _dtm
+from .ssd_scan import ssd_scan as _ssd
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    block_q=128, block_k=128, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _flash(q, k, v, causal=causal, window=window, softcap=softcap,
+                  block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q, k_cache, v_cache, pos, *, block_k=128,
+                     interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _decode(q, k_cache, v_cache, pos, block_k=block_k,
+                   interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def spt_gather(arena, spt, *, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _gather(arena, spt, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("n_arena_pages", "interpret"))
+def spt_scatter(x, spt, n_arena_pages, *, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _scatter(x, spt, n_arena_pages, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("sm_be", "block_m", "block_n",
+                                             "block_k", "interpret"))
+def dual_tenant_matmul(a_ls, b_ls, a_be, b_be, *, sm_be=0.3, block_m=128,
+                       block_n=128, block_k=128, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _dtm(a_ls, b_ls, a_be, b_be, sm_be=sm_be, block_m=block_m,
+                block_n=block_n, block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(q, k, v, log_w, *, chunk=64, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _ssd(q, k, v, log_w, chunk=chunk, interpret=interpret)

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def ref_attention(q, k, v, *, causal=True, window=None, softcap=None):
+    """q: [B,S,H,D]; k,v: [B,S,Hkv,D]."""
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    kr = jnp.repeat(k, G, axis=2).astype(jnp.float32)
+    vr = jnp.repeat(v, G, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kr) * D ** -0.5
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kp <= qp
+    if window is not None:
+        mask &= kp > qp - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, vr).astype(q.dtype)
+
+
+def ref_decode_attention(q, k_cache, v_cache, pos):
+    """q: [B,H,D]; caches: [B,Smax,Hkv,D]; pos scalar."""
+    B, H, D = q.shape
+    Smax, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    kr = jnp.repeat(k_cache, G, axis=2).astype(jnp.float32)
+    vr = jnp.repeat(v_cache, G, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32), kr) * D ** -0.5
+    valid = jnp.arange(Smax)[None, None, :] <= pos
+    s = jnp.where(valid, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", w, vr).astype(q.dtype)
+
+
+def ref_spt_gather(arena, spt):
+    return jnp.take(arena, spt, axis=0)
+
+
+def ref_spt_scatter(x, spt, n_arena_pages):
+    out = jnp.zeros((n_arena_pages, x.shape[1]), x.dtype)
+    return out.at[spt].set(x)
+
+
+def ref_dual_tenant_matmul(a_ls, b_ls, a_be, b_be):
+    f = jnp.float32
+    return (jnp.dot(a_ls.astype(f), b_ls.astype(f)).astype(a_ls.dtype),
+            jnp.dot(a_be.astype(f), b_be.astype(f)).astype(a_be.dtype))
+
+
+def ref_ssd_scan(q, k, v, log_w):
+    """Naive per-step recurrence (inclusive)."""
+    B, T, H, K = q.shape
+    P = v.shape[-1]
+    f = jnp.float32
+
+    def step(state, inp):
+        qt, kt, vt, wt = inp
+        state = jnp.exp(wt.astype(f))[..., None] * state + \
+            jnp.einsum("bhk,bhp->bhkp", kt.astype(f), vt.astype(f))
+        y = jnp.einsum("bhk,bhkp->bhp", qt.astype(f), state)
+        return state, y
+
+    xs = tuple(x.swapaxes(0, 1) for x in (q, k, v, log_w))
+    state0 = jnp.zeros((B, H, K, P), f)
+    _, ys = jax.lax.scan(step, state0, xs)
+    return ys.swapaxes(0, 1).astype(q.dtype)

@@ -1,0 +1,59 @@
+"""Shadow-page-table gather/scatter (TPU Pallas) — the paper's Fig. 10 kernel
+transformation as a TPU kernel.
+
+A tenant's tensor lives on colored pages scattered through a flat arena; the
+SPT maps logical page i -> arena page spt[i]. The SPT is scalar-prefetched so
+the arena block index_map itself performs the indirection (zero extra memory
+traffic beyond the page payload — the TPU analogue of the paper's <1%
+SPT overhead), the same pattern paged-KV serving kernels use.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(spt_ref, arena_ref, o_ref):
+    o_ref[...] = arena_ref[...]
+
+
+def spt_gather(arena, spt, *, interpret=False):
+    """arena: [n_arena_pages, page_elems]; spt: [n_pages] int32.
+    Returns the logical tensor [n_pages, page_elems]."""
+    n_pages = spt.shape[0]
+    page_elems = arena.shape[1]
+    return pl.pallas_call(
+        _gather_kernel,
+        out_shape=jax.ShapeDtypeStruct((n_pages, page_elems), arena.dtype),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n_pages,),
+            in_specs=[pl.BlockSpec((1, page_elems),
+                                   lambda i, spt: (spt[i], 0))],
+            out_specs=pl.BlockSpec((1, page_elems), lambda i, spt: (i, 0))),
+        interpret=interpret,
+    )(spt, arena)
+
+
+def _scatter_kernel(spt_ref, x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def spt_scatter(x, spt, n_arena_pages, *, interpret=False):
+    """Inverse of spt_gather: place logical pages x [n_pages, page_elems]
+    into a fresh arena [n_arena_pages, page_elems] at spt positions.
+    (Pages not referenced by spt are zero.)"""
+    n_pages, page_elems = x.shape
+    return pl.pallas_call(
+        _scatter_kernel,
+        out_shape=jax.ShapeDtypeStruct((n_arena_pages, page_elems), x.dtype),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n_pages,),
+            in_specs=[pl.BlockSpec((1, page_elems), lambda i, spt: (i, 0))],
+            out_specs=pl.BlockSpec((1, page_elems),
+                                   lambda i, spt: (spt[i], 0))),
+        interpret=interpret,
+    )(spt, x)

@@ -1,0 +1,55 @@
+"""Multi-tenant serving launcher (SGDRC on a local device).
+
+    python -m repro.launch.serve --ls qwen3-1.7b --be gemma2-9b \
+        --requests 8 --coloring
+
+Runs reduced-config models for real on the local device through the
+ServingEngine (LS preempts BE at step boundaries; colored KV arenas when
+--coloring). For pod-scale what-if analysis use benchmarks/fig12_invram.py
+(contention simulator with the full configs).
+"""
+import argparse
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ls", nargs="+", default=["qwen3-1.7b"])
+    ap.add_argument("--be", nargs="+", default=["gemma2-9b"])
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=4)
+    ap.add_argument("--coloring", action="store_true")
+    ap.add_argument("--gpu", default="tesla-p40",
+                    help="hash-model for the colored arena")
+    args = ap.parse_args()
+
+    from ..configs import smoke_config
+    from ..core.coloring import gpu_hash_model
+    from ..core.tenancy import TenantSpec
+    from ..serving import ServingEngine
+
+    eng = ServingEngine(
+        max_seq=args.prompt_len + args.max_new + 4,
+        coloring=args.coloring,
+        hash_model=gpu_hash_model(args.gpu) if args.coloring else None)
+    rng = np.random.default_rng(0)
+    for name in args.ls:
+        cfg = smoke_config(name).replace(activation_dtype="float32")
+        eng.add_tenant(TenantSpec(f"ls:{name}", "LS", nice=10_000), cfg)
+    for name in args.be:
+        cfg = smoke_config(name).replace(activation_dtype="float32")
+        eng.add_tenant(TenantSpec(f"be:{name}", "BE", nice=1), cfg)
+    for i in range(args.requests):
+        for t in eng.tenants:
+            eng.submit(t, rng.integers(0, 256, args.prompt_len),
+                       max_new=args.max_new)
+    steps = eng.run_until_idle()
+    import json
+    print(json.dumps(eng.metrics(), indent=1))
+    print(f"engine quanta executed: {steps}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,317 @@
+"""Attention blocks: GQA (with qk-norm, logit softcap, local windows), MLA
+(DeepSeek-V2 latent attention, with absorbed-matmul decode and a compressed
+latent KV cache), and cross-attention (whisper / VLM image layers).
+
+Full-sequence paths use a grouped einsum formulation (no KV-head repeat
+materialization); the Pallas flash kernel in ``repro.kernels`` is an optional
+drop-in for the same contract (see ``use_flash`` seam in transformer.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_rope, causal_mask, dense_init, local_mask, ones, rms_norm, softcap
+
+NEG_INF = -2.0 ** 30  # large-negative that survives bf16
+
+
+# ---------------------------------------------------------------------------
+# parameter builders
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, path, cfg, dtype):
+    D, H, Hkv, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "wq": dense_init(key, path + "/wq", (D, H, Dh), dtype),
+        "wk": dense_init(key, path + "/wk", (D, Hkv, Dh), dtype),
+        "wv": dense_init(key, path + "/wv", (D, Hkv, Dh), dtype),
+        "wo": dense_init(key, path + "/wo", (H, Dh, D), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_gamma"] = jnp.zeros((Dh,), dtype)
+        p["k_gamma"] = jnp.zeros((Dh,), dtype)
+    return p
+
+
+def init_mla(key, path, cfg, dtype):
+    m, D, H = cfg.mla, cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": dense_init(key, path + "/wq_a", (D, m.q_lora_rank), dtype),
+        "q_ln": jnp.zeros((m.q_lora_rank,), dtype),
+        "wq_b": dense_init(key, path + "/wq_b", (m.q_lora_rank, H, qk), dtype),
+        "wkv_a": dense_init(key, path + "/wkv_a",
+                            (D, m.kv_lora_rank + m.qk_rope_head_dim), dtype),
+        "kv_ln": jnp.zeros((m.kv_lora_rank,), dtype),
+        "wk_b": dense_init(key, path + "/wk_b",
+                           (m.kv_lora_rank, H, m.qk_nope_head_dim), dtype),
+        "wv_b": dense_init(key, path + "/wv_b",
+                           (m.kv_lora_rank, H, m.v_head_dim), dtype),
+        "wo": dense_init(key, path + "/wo", (H, m.v_head_dim, D), dtype),
+    }
+
+
+def init_cross_attn(key, path, cfg, kv_dim, dtype):
+    D, H, Dh = cfg.d_model, cfg.num_heads, cfg.head_dim
+    Hkv = cfg.num_kv_heads
+    return {
+        "wq": dense_init(key, path + "/wq", (D, H, Dh), dtype),
+        "wk": dense_init(key, path + "/wk", (kv_dim, Hkv, Dh), dtype),
+        "wv": dense_init(key, path + "/wv", (kv_dim, Hkv, Dh), dtype),
+        "wo": dense_init(key, path + "/wo", (H, Dh, D), dtype),
+        "gate": jnp.zeros((), dtype),   # VLM-style tanh gate on the residual
+    }
+
+
+# ---------------------------------------------------------------------------
+# core grouped attention
+# ---------------------------------------------------------------------------
+
+BLOCKED_THRESHOLD = 2048   # use q-blocked attention above this seq length
+
+
+def blocked_attention(q, k, v, *, causal=True, window=None, cap=None,
+                      q_offset=0, block_q=512, unroll=False):
+    """Memory-bounded attention: scan over query blocks with the full K/V
+    resident (scores never exceed [B,Hkv,G,block_q,Skv]). GQA without KV
+    repeat. This is the lowering-scale path (prefill_32k / train_4k);
+    the Pallas flash kernel implements the same contract on real TPUs."""
+    B, Sq, H, Dh = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    block_q = min(block_q, Sq)
+    assert Sq % block_q == 0
+    nb = Sq // block_q
+    qb = q.reshape(B, nb, block_q, Hkv, G, Dh).transpose(1, 0, 2, 3, 4, 5)
+    k_pos = jnp.arange(Skv)[None, :]
+
+    def one(i, qblk):
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, k,
+                       preferred_element_type=jnp.float32) * (Dh ** -0.5)
+        if cap is not None:
+            s = softcap(s, cap)
+        q_pos = (i * block_q + jnp.arange(block_q))[:, None] + q_offset
+        mask = jnp.ones((block_q, Skv), bool)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(v.dtype), v,
+                          preferred_element_type=jnp.float32)
+
+    if unroll:
+        outs = [one(i, qb[i]) for i in range(nb)]
+        out = jnp.stack(outs, axis=0)
+    else:
+        out = jax.lax.scan(
+            lambda c, inp: (c, one(inp[0], inp[1])),
+            0, (jnp.arange(nb), qb))[1]
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, v.shape[-1])
+    return out.astype(q.dtype)
+
+
+def grouped_attention(q, k, v, mask, cap=None):
+    """q: [B,Sq,H,Dh]; k,v: [B,Sk,Hkv,Dh]; mask: [B?,Sq,Sk] or [Sq,Sk] bool.
+
+    Returns [B,Sq,H,Dh]. Grouped (GQA) without repeating KV heads.
+    """
+    B, Sq, H, Dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, Dh)
+    # bf16 operands with fp32 accumulation (MXU-native); never materialize a
+    # fp32 copy of the K/V (cache) tensors
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32) * (Dh ** -0.5)
+    if cap is not None:
+        scores = softcap(scores, cap)
+    if mask is not None:
+        if mask.ndim == 2:                     # [Sq,Sk]
+            mask = mask[None, None, None]
+        elif mask.ndim == 3:                   # [B,Sq,Sk]
+            mask = mask[:, None, None]
+        scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)
+
+
+def _proj_qkv(p, x, cfg, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_gamma"], cfg.norm_eps)
+        k = rms_norm(k, p["k_gamma"], cfg.norm_eps)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_forward(p, x, cfg, *, layer_kind="global", positions=None, causal=True):
+    """Full-sequence self attention. x: [B,S,D]."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = _proj_qkv(p, x, cfg, positions)
+    window = cfg.local_window if (layer_kind == "local" and causal) else None
+    if S > BLOCKED_THRESHOLD:
+        out = blocked_attention(q, k, v, causal=causal, window=window,
+                                cap=cfg.attn_logit_softcap,
+                                unroll=not cfg.scan_layers)
+    else:
+        if not causal:
+            mask = None
+        elif window:
+            mask = local_mask(S, S, window)
+        else:
+            mask = causal_mask(S, S)
+        out = grouped_attention(q, k, v, mask, cfg.attn_logit_softcap)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def gqa_decode(p, x, cfg, cache_k, cache_v, pos, *, layer_kind="global"):
+    """One-token decode. x: [B,1,D]; cache_{k,v}: [B,Hkv,Smax,Dh] (KV-major:
+    attention-einsum-native layout, no per-step transposes; sequence axis is
+    the sharding axis); pos: scalar.
+
+    Returns (out [B,1,D], new_cache_k, new_cache_v).
+    """
+    B = x.shape[0]
+    Hkv, Smax = cache_k.shape[1], cache_k.shape[2]
+    H = cfg.num_heads
+    G = H // Hkv
+    Dh = cfg.head_dim
+    positions = jnp.broadcast_to(jnp.asarray(pos), (B,))[:, None]
+    q, k, v = _proj_qkv(p, x, cfg, positions)       # k,v: [B,1,Hkv,Dh]
+    posc = jnp.asarray(pos).reshape(())
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k.transpose(0, 2, 1, 3).astype(cache_k.dtype),
+        (0, 0, posc, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v.transpose(0, 2, 1, 3).astype(cache_v.dtype),
+        (0, 0, posc, 0))
+    kv_pos = jnp.arange(Smax)[None, :]
+    valid = kv_pos <= positions                     # [B, Smax]
+    if layer_kind == "local" and cfg.local_window:
+        valid &= kv_pos > positions - cfg.local_window
+    qg = q.reshape(B, 1, Hkv, G, Dh)
+    scores = jnp.einsum("bqhgd,bhkd->bhgqk", qg, cache_k,
+                        preferred_element_type=jnp.float32) * (Dh ** -0.5)
+    if cfg.attn_logit_softcap:
+        scores = softcap(scores, cfg.attn_logit_softcap)
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bqhgd", w.astype(cache_v.dtype), cache_v,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, 1, H, Dh).astype(x.dtype)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def _mla_q(p, x, cfg, positions):
+    m = cfg.mla
+    ql = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"]), p["q_ln"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", ql, p["wq_b"])
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(p, x, cfg, positions):
+    m = cfg.mla
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    c_kv = rms_norm(kv[..., : m.kv_lora_rank], p["kv_ln"], cfg.norm_eps)
+    k_rope = apply_rope(kv[..., None, m.kv_lora_rank:], positions, cfg.rope_theta)
+    return c_kv, k_rope[..., 0, :]                  # [B,S,R], [B,S,rope]
+
+
+def mla_forward(p, x, cfg, *, positions=None, causal=True, **_):
+    """Full-sequence MLA with expanded keys/values (training/prefill path).
+    The rope sub-dim is folded into per-head keys so the GQA attention cores
+    (blocked or grouped) apply unchanged."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    c_kv, k_rope = _mla_latent(p, x, cfg, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["wk_b"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["wv_b"])
+    # fold rope dims: q' = [q_nope | q_rope], k' = [k_nope | k_rope(bcast)]
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (B, S, H, m.qk_rope_head_dim))], axis=-1)
+    # rescale so the shared 1/sqrt(d) in the attention cores matches MLA's
+    d_eff = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ratio = (d_eff ** -0.5) / (q_full.shape[-1] ** -0.5)
+    if abs(ratio - 1.0) > 1e-9:
+        q_full = q_full * ratio
+    if S > BLOCKED_THRESHOLD:
+        out = blocked_attention(q_full, k_full, v, causal=causal,
+                                unroll=not cfg.scan_layers)
+    else:
+        mask = causal_mask(S, S) if causal else None
+        out = grouped_attention(q_full, k_full, v, mask)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def mla_decode(p, x, cfg, cache_ckv, cache_krope, pos, **_):
+    """Absorbed-matmul MLA decode against the compressed latent cache.
+
+    cache_ckv: [B,Smax,R]; cache_krope: [B,Smax,rope].
+    Scores are computed in latent space: q_eff = q_nope @ wk_b (absorbed), and
+    the attention output is re-expanded through wv_b afterwards — the cache
+    stays at R + rope floats per token (the paper-relevant serving win).
+    """
+    m = cfg.mla
+    B = x.shape[0]
+    Smax = cache_ckv.shape[1]
+    positions = jnp.broadcast_to(jnp.asarray(pos), (B,))[:, None]
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    c_kv, k_rope = _mla_latent(p, x, cfg, positions)
+    posc = jnp.asarray(pos).reshape(())
+    cache_ckv = jax.lax.dynamic_update_slice(
+        cache_ckv, c_kv.astype(cache_ckv.dtype), (0, posc, 0))
+    cache_krope = jax.lax.dynamic_update_slice(
+        cache_krope, k_rope.astype(cache_krope.dtype), (0, posc, 0))
+    # absorb: q_eff[b,1,h,R]
+    q_eff = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["wk_b"])
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    scores = (jnp.einsum("bqhr,bsr->bhqs", q_eff, cache_ckv,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bqhk,bsk->bhqs", q_rope, cache_krope,
+                           preferred_element_type=jnp.float32)) * scale
+    valid = (jnp.arange(Smax)[None, :] <= positions)[:, None, None]   # [B,1,1,S]
+    scores = jnp.where(valid, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    o_latent = jnp.einsum("bhqs,bsr->bqhr", w.astype(cache_ckv.dtype),
+                          cache_ckv, preferred_element_type=jnp.float32)
+    out = jnp.einsum("bqhr,rhn->bqhn", o_latent.astype(x.dtype), p["wv_b"])
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache_ckv, cache_krope
+
+
+# ---------------------------------------------------------------------------
+# cross attention (enc-dec / VLM)
+# ---------------------------------------------------------------------------
+
+def cross_attn_forward(p, x, kv_feats, cfg, gated=False):
+    """x: [B,S,D]; kv_feats: [B,T,kv_dim] (encoder output / patch embeddings)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", kv_feats.astype(x.dtype), p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", kv_feats.astype(x.dtype), p["wv"])
+    out = grouped_attention(q, k, v, mask=None, cap=cfg.attn_logit_softcap)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    if gated:
+        out = jnp.tanh(p["gate"].astype(jnp.float32)).astype(out.dtype) * out
+    return out

@@ -1,0 +1,42 @@
+"""Model input construction: concrete batches (tests/examples) and abstract
+ShapeDtypeStruct stand-ins (dry-run lowering, no allocation)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+
+
+def batch_fields(cfg: ModelConfig, B: int, S: int, with_labels=True):
+    """(name, shape, dtype) for every model input."""
+    fields = [("tokens", (B, S), jnp.int32)]
+    if with_labels:
+        fields.append(("labels", (B, S), jnp.int32))
+    if cfg.encoder:
+        fields.append(("frames", (B, cfg.encoder.num_frames, cfg.d_model),
+                       jnp.bfloat16 if cfg.activation_dtype == "bfloat16"
+                       else jnp.float32))
+    if cfg.vision:
+        fields.append(("vision", (B, cfg.vision.num_tokens, cfg.vision.vision_dim),
+                       jnp.bfloat16 if cfg.activation_dtype == "bfloat16"
+                       else jnp.float32))
+    return fields
+
+
+def make_batch(cfg: ModelConfig, B: int, S: int, key=None, with_labels=True):
+    key = key if key is not None else jax.random.key(0)
+    out = {}
+    for name, shape, dtype in batch_fields(cfg, B, S, with_labels):
+        key, sub = jax.random.split(key)
+        if dtype == jnp.int32:
+            out[name] = jax.random.randint(sub, shape, 0, cfg.vocab_size,
+                                           dtype=jnp.int32)
+        else:
+            out[name] = jax.random.normal(sub, shape, jnp.float32).astype(dtype)
+    return out
+
+
+def abstract_batch(cfg: ModelConfig, B: int, S: int, with_labels=True):
+    return {name: jax.ShapeDtypeStruct(shape, dtype)
+            for name, shape, dtype in batch_fields(cfg, B, S, with_labels)}

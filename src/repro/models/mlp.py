@@ -1,0 +1,28 @@
+"""Feed-forward blocks: SwiGLU (gated), squared-ReLU / GELU (non-gated)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ACTIVATIONS, dense_init, sq_relu
+
+
+def init_mlp(key, path, d_model, d_ff, act, dtype):
+    if act == "swiglu":
+        return {
+            "w_gate": dense_init(key, path + "/w_gate", (d_model, d_ff), dtype),
+            "w_up": dense_init(key, path + "/w_up", (d_model, d_ff), dtype),
+            "w_down": dense_init(key, path + "/w_down", (d_ff, d_model), dtype),
+        }
+    return {
+        "w_up": dense_init(key, path + "/w_up", (d_model, d_ff), dtype),
+        "w_down": dense_init(key, path + "/w_down", (d_ff, d_model), dtype),
+    }
+
+
+def mlp_forward(p, x, act: str):
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = ACTIVATIONS["sq_relu" if act == "sq_relu" else "gelu"](x @ p["w_up"])
+    return h @ p["w_down"]

@@ -1,0 +1,115 @@
+"""Mixture-of-Experts layer: top-k routing, Switch-style capacity dispatch
+(scatter/gather via segment-sum, no [T,E,C] one-hot), shared experts, and
+expert-parallel-friendly layout (experts stacked on the leading axis so the
+dispatch buffer [E, C, D] shards over the model/expert axis → all-to-all).
+
+Aux losses (load-balance + router z) are returned for the trainer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init
+from ..dist.sharding import hint
+
+
+def init_moe(key, path, cfg, dtype):
+    m, D = cfg.moe, cfg.d_model
+    F = m.d_ff_expert
+    E = m.num_experts
+    p = {
+        "router": dense_init(key, path + "/router", (D, E), jnp.float32, scale=D ** -0.5),
+        "experts": {
+            "w_gate": dense_init(key, path + "/w_gate", (E, D, F), dtype),
+            "w_up": dense_init(key, path + "/w_up", (E, D, F), dtype),
+            "w_down": dense_init(key, path + "/w_down", (E, F, D), dtype),
+        },
+    }
+    if m.num_shared_experts:
+        Fs = m.num_shared_experts * F
+        p["shared"] = {
+            "w_gate": dense_init(key, path + "/sh_gate", (D, Fs), dtype),
+            "w_up": dense_init(key, path + "/sh_up", (D, Fs), dtype),
+            "w_down": dense_init(key, path + "/sh_down", (Fs, D), dtype),
+        }
+    return p
+
+
+def _capacity(m, T: int) -> int:
+    c = int(m.top_k * T * m.capacity_factor / m.num_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def moe_forward(p, x, cfg):
+    """x: [B,S,D] -> (y [B,S,D], aux_losses dict)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    E, K = m.num_experts, m.top_k
+    C = _capacity(m, T)
+    xf = x.reshape(T, D)
+
+    # --- routing (fp32) ---
+    logits = xf.astype(jnp.float32) @ p["router"]                 # [T,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, K)                          # [T,K]
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+
+    # aux losses
+    z = jax.nn.logsumexp(logits, axis=-1)
+    z_loss = m.router_z_loss * jnp.mean(z * z)
+    frac_tokens = jnp.mean(
+        (jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32)), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    lb_loss = m.load_balance_loss * E * jnp.sum(frac_tokens * frac_probs)
+
+    # --- capacity positions, per routing priority (k-major then token order) ---
+    y = jnp.zeros((T, D), jnp.float32)
+    # dispatch target pre-pinned to the expert axis: the scatter then lowers
+    # to a sharded scatter (updates gathered once) instead of a replicated
+    # flat buffer + full all-reduce (see EXPERIMENTS.md SPerf, deepseek train)
+    buf = hint(jnp.zeros((E, C, D), x.dtype), "expert", None, None)
+    running = jnp.zeros((E,), jnp.int32)
+    es, ps, keeps, gs = [], [], [], []
+    for k in range(K):
+        oh = jax.nn.one_hot(idx[:, k], E, dtype=jnp.int32)        # [T,E]
+        pos_all = jnp.cumsum(oh, axis=0) - 1 + running[None, :]
+        pos = jnp.take_along_axis(pos_all, idx[:, k:k + 1], axis=1)[:, 0]
+        running = running + jnp.sum(oh, axis=0)
+        keep = pos < C
+        pos_c = jnp.where(keep, pos, C)                           # C = drop bin
+        es.append(idx[:, k])
+        ps.append(jnp.clip(pos_c, 0, C - 1))
+        keeps.append(keep)
+        gs.append(gates[:, k])
+    # ONE fused scatter for all k (one partial-sum all-reduce of the dispatch
+    # buffer per layer instead of K — see EXPERIMENTS.md SPerf iteration)
+    e_cat = jnp.concatenate(es)
+    pos_cat = jnp.concatenate(
+        [jnp.where(keeps[k], ps[k], C) for k in range(K)])
+    upd = jnp.broadcast_to(xf[None], (K,) + xf.shape).reshape(K * T, D)
+    buf = buf.at[e_cat, pos_cat].add(upd, mode="drop")
+
+    # --- expert compute (stacked einsum; shards over expert axis) ---
+    ex = p["experts"]
+    eb = hint(buf, "expert", None, None)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", eb, ex["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", eb, ex["w_up"])
+    eo = jnp.einsum("ecf,efd->ecd", h, ex["w_down"])
+    eo = hint(eo, "expert", None, None)
+
+    # --- combine (2D gather from the expert-sharded output) ---
+    for k in range(K):
+        g = (gs[k] * keeps[k]).astype(jnp.float32)
+        y = y + eo[es[k], ps[k]].astype(jnp.float32) * g[:, None]
+
+    # --- shared experts (always-on) ---
+    if "shared" in p:
+        sp = p["shared"]
+        hs = jax.nn.silu(xf @ sp["w_gate"]) * (xf @ sp["w_up"])
+        y = y + (hs @ sp["w_down"]).astype(jnp.float32)
+
+    aux = {"z_loss": z_loss, "lb_loss": lb_loss,
+           "dropped_frac": 1.0 - jnp.mean(jnp.stack(keeps).astype(jnp.float32))}
+    return y.reshape(B, S, D).astype(x.dtype), aux

@@ -1,0 +1,244 @@
+"""State-space / linear-recurrence blocks: a shared chunked linear-attention
+scan (GLA-style) powering both RWKV6 ("Finch", per-channel data-dependent
+decay + bonus) and Mamba2 (SSD, scalar-per-head decay), plus one-step decode.
+
+Recurrence (per head, state S in R^{K x P}):
+    S_t = diag(w_t) S_t-1 + k_t v_t^T        (w_t = exp(log_w_t) <= 1)
+    y_t = q_t . S_t            (inclusive, mamba2)
+    y_t = q_t . (S_t-1 + diag(u) k_t v_t^T)  (exclusive + bonus, rwkv6)
+
+The chunked form factorizes intra-chunk decay as exp(s_j - s_i) with
+s = cumsum(log_w) clamped at CLAMP to stay in fp32 range; tokens whose decay
+underflows the clamp have provably negligible contribution.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, rms_norm, sq_relu
+
+CLAMP = 20.0
+MAX_UNROLL_CHUNKS = 128   # probe-mode unroll cap for the chunk scan
+
+
+def _chunk_step(state, qc, kc, vc, sc, sq, inclusive, u):
+    """One chunk. qc,kc: [B,L,H,K]; vc: [B,L,H,P]; sc: [B,L,H,K] cumulative
+    log-decay within the chunk (inclusive of step t); sq: the q-side exponent
+    (== sc for inclusive scans, the exclusive cumsum sc - w for rwkv-style
+    read-before-decay). state: [B,H,K,P] fp32."""
+    L = qc.shape[1]
+    q_dec = qc * jnp.exp(jnp.clip(sq, -CLAMP, 0.0))     # q_j * exp(s_j^(q))
+    # contribution of k_i to y_j: exp(s_j^(q) - s_i)
+    k_dec = kc * jnp.exp(jnp.clip(-(sc), None, CLAMP))  # k_i * exp(-s_i)
+    scores = jnp.einsum("blhk,bmhk->bhlm", q_dec, k_dec)  # [B,H,L,L]
+    i = jnp.arange(L)
+    mask = (i[:, None] >= i[None, :]) if inclusive else (i[:, None] > i[None, :])
+    scores = scores * mask.astype(scores.dtype)
+    y = jnp.einsum("bhlm,bmhp->blhp", scores, vc)
+    # cross-chunk: q_j exp(s_j) . S_prev
+    y = y + jnp.einsum("blhk,bhkp->blhp", q_dec, state)
+    if u is not None:  # rwkv bonus: diagonal term q_t.(u*k_t) v_t
+        diag = jnp.einsum("blhk,hk,blhk->blh", qc, u, kc)
+        y = y + diag[..., None] * vc
+    # state update: S = exp(s_L) S_prev + sum_i k_i exp(s_L - s_i) v_i^T
+    s_last = jnp.clip(sc[:, -1:], -CLAMP, 0.0)          # [B,1,H,K]
+    k_tail = kc * jnp.exp(jnp.clip(s_last - sc, -CLAMP, 0.0))
+    new_state = (jnp.exp(s_last[:, 0])[..., None] * state
+                 + jnp.einsum("blhk,blhp->bhkp", k_tail, vc))
+    return new_state, y
+
+
+def chunked_linear_attn(q, k, v, log_w, *, bonus=None, inclusive=True,
+                        chunk=64, initial_state=None, unroll=False):
+    """q,k,log_w: [B,T,H,K]; v: [B,T,H,P]. Returns (y [B,T,H,P], S [B,H,K,P]).
+    ``unroll`` unrolls the chunk scan (dry-run probes: XLA cost analysis
+    counts a scan body once)."""
+    B, T, H, K = q.shape
+    P = v.shape[-1]
+    L = min(chunk, T)
+    assert T % L == 0, (T, L)
+    n = T // L
+    dt = jnp.float32
+    qf, kf, vf = q.astype(dt), k.astype(dt), v.astype(dt)
+    wf = log_w.astype(dt)
+    rs = lambda x: x.reshape(B, n, L, H, x.shape[-1]).swapaxes(0, 1)
+    qc, kc, vc, wc = rs(qf), rs(kf), rs(vf), rs(wf)
+    sc = jnp.cumsum(wc, axis=2)                          # [n,B,L,H,K]
+    sq = sc if inclusive else sc - wc                    # read-before-decay
+    state0 = (jnp.zeros((B, H, K, P), dt) if initial_state is None
+              else initial_state.astype(dt))
+    uf = None if bonus is None else bonus.astype(dt)
+
+    def body(state, inputs):
+        qi, ki, vi, si, sqi = inputs
+        state, y = _chunk_step(state, qi, ki, vi, si, sqi, inclusive, uf)
+        return state, y
+
+    # unroll for dry-run probes (cost analysis counts a scan body once), but
+    # cap the unrolled body count — beyond the cap the dry-run applies an
+    # analytic correction for the residual trip count (see launch/dryrun.py)
+    do_unroll = unroll and n <= MAX_UNROLL_CHUNKS
+    state, ys = jax.lax.scan(body, state0, (qc, kc, vc, sc, sq),
+                             unroll=True if do_unroll else 1)
+    y = ys.swapaxes(0, 1).reshape(B, T, H, P).astype(q.dtype)
+    return y, state
+
+
+def linear_attn_step(q, k, v, log_w, state, *, bonus=None, inclusive=True):
+    """Single-token decode. q,k,log_w: [B,H,K]; v: [B,H,P]; state [B,H,K,P]."""
+    dt = jnp.float32
+    qf, kf, vf = q.astype(dt), k.astype(dt), v.astype(dt)
+    w = jnp.exp(log_w.astype(dt))[..., None]             # [B,H,K,1]
+    kv = jnp.einsum("bhk,bhp->bhkp", kf, vf)
+    if inclusive:
+        state = w * state + kv
+        y = jnp.einsum("bhk,bhkp->bhp", qf, state)
+    else:
+        eff = state + (bonus.astype(dt)[None, :, :, None] * kv
+                       if bonus is not None else kv * 0)
+        y = jnp.einsum("bhk,bhkp->bhp", qf, eff)
+        state = w * state + kv
+    return y.astype(q.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 time-mix / channel-mix
+# ---------------------------------------------------------------------------
+
+def init_rwkv_block(key, path, cfg, dtype):
+    D = cfg.d_model
+    s = cfg.ssm
+    H = D // s.head_dim
+    K = s.head_dim
+    lora = 64
+    return {
+        "tm_mix": jnp.zeros((5, D), dtype),             # r,k,v,w,g static mixes
+        "tm_wr": dense_init(key, path + "/tm_wr", (D, D), dtype),
+        "tm_wk": dense_init(key, path + "/tm_wk", (D, D), dtype),
+        "tm_wv": dense_init(key, path + "/tm_wv", (D, D), dtype),
+        "tm_wg": dense_init(key, path + "/tm_wg", (D, D), dtype),
+        "tm_wo": dense_init(key, path + "/tm_wo", (D, D), dtype),
+        "decay_w": {  # data-dependent decay LoRA (the Finch contribution)
+            "base": jnp.full((H, K), -2.0, jnp.float32),
+            "a": dense_init(key, path + "/dw_a", (D, lora), dtype),
+            "b": dense_init(key, path + "/dw_b", (lora, D), dtype),
+        },
+        "bonus": dense_init(key, path + "/bonus", (H, K), jnp.float32, scale=0.5),
+        "ln_x": jnp.zeros((D,), dtype),                 # per-head group norm gamma
+        "cm_mix": jnp.zeros((2, D), dtype),
+        "cm_wk": dense_init(key, path + "/cm_wk", (D, cfg.d_ff), dtype),
+        "cm_wv": dense_init(key, path + "/cm_wv", (cfg.d_ff, D), dtype),
+        "cm_wr": dense_init(key, path + "/cm_wr", (D, D), dtype),
+    }
+
+
+def _token_shift(x, last=None):
+    """shift right by one along T; `last` [B,1,D] fills position 0."""
+    pad = jnp.zeros_like(x[:, :1]) if last is None else last.astype(x.dtype)
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def rwkv_time_mix(p, x, cfg, state=None, shift_last=None):
+    """x: [B,T,D]. state: [B,H,K,K] or None. Returns (y, new_state, new_shift)."""
+    B, T, D = x.shape
+    s = cfg.ssm
+    K = s.head_dim
+    H = D // K
+    xx = _token_shift(x, shift_last)
+    mix = p["tm_mix"]
+    xr = x + (xx - x) * mix[0]
+    xk = x + (xx - x) * mix[1]
+    xv = x + (xx - x) * mix[2]
+    xw = x + (xx - x) * mix[3]
+    xg = x + (xx - x) * mix[4]
+    r = (xr @ p["tm_wr"]).reshape(B, T, H, K)
+    k = (xk @ p["tm_wk"]).reshape(B, T, H, K)
+    v = (xv @ p["tm_wv"]).reshape(B, T, H, K)
+    g = jax.nn.silu(xg @ p["tm_wg"])
+    dw = p["decay_w"]
+    w_dd = (jnp.tanh(xw @ dw["a"]) @ dw["b"]).reshape(B, T, H, K)
+    log_w = -jnp.exp(jnp.clip(dw["base"][None, None] + w_dd.astype(jnp.float32),
+                              -8.0, 4.0))               # <= 0
+    y, new_state = chunked_linear_attn(
+        r, k, v, log_w, bonus=p["bonus"], inclusive=False,
+        chunk=min(s.chunk, T), initial_state=state,
+        unroll=not cfg.scan_layers)
+    yn = rms_norm(y.reshape(B * T * H, K),
+                  jnp.zeros((K,), y.dtype), cfg.norm_eps).reshape(B, T, D)
+    yn = yn * (1.0 + p["ln_x"].astype(jnp.float32)).astype(yn.dtype) * g
+    return yn @ p["tm_wo"], new_state, x[:, -1:]
+
+
+def rwkv_channel_mix(p, x, cfg, shift_last=None):
+    xx = _token_shift(x, shift_last)
+    mix = p["cm_mix"]
+    xk = x + (xx - x) * mix[0]
+    xr = x + (xx - x) * mix[1]
+    k = sq_relu(xk @ p["cm_wk"])
+    return jax.nn.sigmoid(xr @ p["cm_wr"]) * (k @ p["cm_wv"]), x[:, -1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+def init_mamba2_block(key, path, cfg, dtype):
+    D = cfg.d_model
+    s = cfg.ssm
+    d_in = s.expand * D
+    H = d_in // s.head_dim
+    N = s.state_dim
+    conv_ch = d_in + 2 * N
+    return {
+        "in_proj": dense_init(key, path + "/in_proj",
+                              (D, 2 * d_in + 2 * N + H), dtype),
+        "conv": dense_init(key, path + "/conv", (s.conv_dim, conv_ch), dtype,
+                           scale=s.conv_dim ** -0.5),
+        "a_log": jnp.zeros((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "out_norm": jnp.zeros((d_in,), dtype),
+        "out_proj": dense_init(key, path + "/out_proj", (d_in, D), dtype),
+    }
+
+
+def _causal_conv(x, w, conv_state=None):
+    """x: [B,T,C]; w: [W,C] depthwise. Returns (y, new_state [B,W-1,C])."""
+    W = w.shape[0]
+    pad = (jnp.zeros((x.shape[0], W - 1, x.shape[-1]), x.dtype)
+           if conv_state is None else conv_state.astype(x.dtype))
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    return y, xp[:, -(W - 1):] if W > 1 else jnp.zeros((x.shape[0], 0, x.shape[-1]), x.dtype)
+
+
+def mamba2_block(p, x, cfg, state=None, conv_state=None):
+    """x: [B,T,D]. state: [B,H,N,P]. Returns (y, new_state, new_conv_state)."""
+    B, T, D = x.shape
+    s = cfg.ssm
+    d_in = s.expand * D
+    P = s.head_dim
+    H = d_in // P
+    N = s.state_dim
+    zxbcdt = x @ p["in_proj"]
+    z, xs, Bc, Cc, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    conv_out, new_conv = _causal_conv(conv_in, p["conv"], conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xs, Bc, Cc = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])     # [B,T,H]
+    log_w = (-jnp.exp(p["a_log"]) * dtf)                             # [B,T,H]
+    v = (xs.reshape(B, T, H, P) * dtf[..., None].astype(xs.dtype))
+    q = jnp.broadcast_to(Cc[:, :, None, :], (B, T, H, N))
+    k = jnp.broadcast_to(Bc[:, :, None, :], (B, T, H, N))
+    log_w_k = jnp.broadcast_to(log_w[..., None], (B, T, H, N))
+    y, new_state = chunked_linear_attn(
+        q, k, v.astype(q.dtype), log_w_k, inclusive=True,
+        chunk=min(s.chunk, T), initial_state=state,
+        unroll=not cfg.scan_layers)
+    y = y + p["d_skip"][None, None, :, None].astype(y.dtype) * xs.reshape(B, T, H, P)
+    y = y.reshape(B, T, d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    return y @ p["out_proj"], new_state, new_conv

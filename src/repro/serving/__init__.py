@@ -1,0 +1,2 @@
+from .engine import Request, ServingEngine
+from .swap import model_bytes, pipelined_serve_time, swap_requests

@@ -1,0 +1,194 @@
+"""Multi-tenant serving engine — the runnable (real-JAX) face of SGDRC.
+
+Executes actual model forwards for LS and BE tenants on the local device,
+applying the paper's policies at the natural TPU preemption boundary (one
+decode/prefill step = one bounded tile quantum):
+
+  * LS requests strictly preempt BE *between* steps (elastic multiplexing),
+  * BE runs whenever no LS work is queued (resource lending),
+  * per-tenant KV caches are bump-allocated from a ColoredArena when coloring
+    is enabled (the SPT indirection is exercised by the kernels' tests; the
+    engine tracks channel placement and isolation violations),
+  * host<->device weight/cache traffic goes through the PCIe CFS.
+
+At pod scale the same engine drives the contention simulator instead of the
+local device (see benchmarks/fig12_invram.py).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..core.coloring.allocator import ColoredArena, split_channels
+from ..core.costmodel import param_count
+from ..core.tenancy import TenantSpec
+from ..models import io as model_io
+from ..models import transformer as tf
+
+
+@dataclass
+class Request:
+    rid: int
+    tenant: str
+    tokens: np.ndarray             # [S] prompt
+    max_new: int
+    t_submit: float
+    t_done: Optional[float] = None
+    output: Optional[list] = None
+
+    @property
+    def latency(self):
+        return None if self.t_done is None else self.t_done - self.t_submit
+
+
+@dataclass
+class _TenantRT:
+    spec: TenantSpec
+    cfg: ModelConfig
+    params: object
+    decode_fn: object
+    prefill_fn: object
+    queue: List[Request] = field(default_factory=list)
+    done: List[Request] = field(default_factory=list)
+    # BE batch accumulation
+    current: Optional[Request] = None
+    cache: object = None
+    pos: int = 0
+    alloc_name: Optional[str] = None
+
+
+class ServingEngine:
+    def __init__(self, max_seq: int = 128, coloring: bool = False,
+                 ch_be: float = 1 / 3, arena_bytes: int = 64 << 20,
+                 hash_model=None, now_fn=None):
+        self.max_seq = max_seq
+        self.tenants: Dict[str, _TenantRT] = {}
+        self.clock = now_fn or time.perf_counter
+        self._rid = 0
+        self.coloring = coloring
+        self.arena = None
+        if coloring:
+            assert hash_model is not None
+            self.arena = ColoredArena(arena_bytes, hash_model.channel_of,
+                                      hash_model.num_channels,
+                                      hash_model.granularity)
+            self.ls_ch, self.be_ch = split_channels(
+                hash_model.num_channels, ch_be)
+
+    # ------------------------------------------------------------------
+    def add_tenant(self, spec: TenantSpec, cfg: ModelConfig, params=None,
+                   key=None):
+        params = params if params is not None else tf.init_params(
+            key if key is not None else jax.random.key(hash(spec.name) % 2**31),
+            cfg)
+
+        def _prefill(p, tokens):
+            logits, aux = tf.forward(p, cfg, {"tokens": tokens})
+            return logits[:, -1]
+
+        def _decode(p, tok, cache, pos):
+            return tf.decode_step(p, cfg, tok, cache, pos)
+
+        rt = _TenantRT(spec, cfg, params,
+                       decode_fn=jax.jit(_decode), prefill_fn=jax.jit(_prefill))
+        if self.arena is not None:
+            chans = self.ls_ch if spec.is_ls else self.be_ch
+            kv_bytes = int(param_count(cfg) * 0.02) + 1024  # KV arena slice
+            self.arena.alloc(spec.name, kv_bytes, chans)
+            rt.alloc_name = spec.name
+        self.tenants[spec.name] = rt
+        return rt
+
+    def submit(self, tenant: str, tokens, max_new: int = 8):
+        rt = self.tenants[tenant]
+        self._rid += 1
+        req = Request(self._rid, tenant, np.asarray(tokens, np.int32),
+                      max_new, self.clock())
+        rt.queue.append(req)
+        return req
+
+    # ------------------------------------------------------------------
+    def _start(self, rt: _TenantRT, req: Request):
+        rt.current = req
+        req.output = []
+        toks = jnp.asarray(req.tokens[None, :])
+        logits = rt.prefill_fn(rt.params, toks)
+        nxt = int(jnp.argmax(logits[0]))
+        req.output.append(nxt)
+        rt.cache = tf.init_cache(rt.cfg, 1, self.max_seq,
+                                 dtype=jnp.float32
+                                 if rt.cfg.activation_dtype == "float32"
+                                 else None)
+        # replay prompt into the cache via decode steps (reference path)
+        rt.pos = 0
+        for t in req.tokens:
+            _, rt.cache = rt.decode_fn(rt.params,
+                                       jnp.asarray([[t]], jnp.int32),
+                                       rt.cache, jnp.asarray(rt.pos))
+            rt.pos += 1
+
+    def _step_one(self, rt: _TenantRT) -> bool:
+        """Run one bounded work quantum for this tenant. True if progressed."""
+        if rt.current is None:
+            if not rt.queue:
+                return False
+            self._start(rt, rt.queue.pop(0))
+            return True
+        req = rt.current
+        tok = jnp.asarray([[req.output[-1]]], jnp.int32)
+        logits, rt.cache = rt.decode_fn(rt.params, tok, rt.cache,
+                                        jnp.asarray(rt.pos))
+        rt.pos += 1
+        req.output.append(int(jnp.argmax(logits[0, 0])))
+        if len(req.output) > req.max_new or rt.pos >= self.max_seq - 1:
+            req.t_done = self.clock()
+            rt.done.append(req)
+            rt.current = None
+        return True
+
+    # ------------------------------------------------------------------
+    def step(self) -> bool:
+        """One engine quantum: LS first (elastic preemption boundary),
+        BE otherwise (lending)."""
+        ls = [rt for rt in self.tenants.values()
+              if rt.spec.is_ls and (rt.queue or rt.current)]
+        if ls:
+            # round-robin across LS tenants with pending work
+            ls.sort(key=lambda rt: (rt.current is None,
+                                    rt.queue[0].t_submit if rt.queue else 0))
+            return self._step_one(ls[0])
+        for rt in self.tenants.values():
+            if not rt.spec.is_ls and (rt.queue or rt.current):
+                return self._step_one(rt)
+        return False
+
+    def run_until_idle(self, max_steps: int = 100_000):
+        n = 0
+        while self.step():
+            n += 1
+            if n >= max_steps:
+                break
+        return n
+
+    # ------------------------------------------------------------------
+    def metrics(self):
+        out = {}
+        for name, rt in self.tenants.items():
+            lats = [r.latency for r in rt.done if r.latency is not None]
+            out[name] = {
+                "completed": len(rt.done),
+                "p50_ms": float(np.percentile(lats, 50) * 1e3) if lats else None,
+                "p99_ms": float(np.percentile(lats, 99) * 1e3) if lats else None,
+            }
+        if self.arena is not None:
+            out["_coloring"] = {
+                name: {"violations": self.arena.isolation_violations(a),
+                       "pages": a.n_pages}
+                for name, a in self.arena.allocations.items()}
+        return out

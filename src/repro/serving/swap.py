@@ -1,0 +1,52 @@
+"""Model-swapping over the interconnect (paper scenario #2, §8.4): DNNs live
+in host memory and must be streamed to the device before serving; the PCIe
+scheduler decides who gets the bus. PipeSwitch-style pipelining overlaps
+layer transfer with layer execution (§7).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List
+
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..core.costmodel import model_costs, param_count
+from ..core.pcie.bus import BusSpec, CopyRequest
+from ..core.simulator import DeviceSpec
+
+
+def model_bytes(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
+    return param_count(cfg) * dtype_bytes
+
+
+def pipelined_serve_time(cfg: ModelConfig, B: int, S: int, mode: str,
+                         dev: DeviceSpec, effective_bw: float) -> float:
+    """Execution latency when weights stream in at effective_bw and layer i's
+    compute overlaps layer i+1's transfer (PipeSwitch): the request finishes
+    at max(total_transfer, first_layer_transfer + total_compute)."""
+    ops = model_costs(cfg, B, S, mode)
+    compute = sum(max(o.flops / dev.peak_flops, o.bytes / dev.hbm_bw)
+                  for o in ops)
+    total_tx = model_bytes(cfg) / max(effective_bw, 1.0)
+    first_tx = total_tx / max(cfg.num_layers, 1)
+    return max(total_tx, first_tx + compute)
+
+
+def swap_requests(cfg: ModelConfig, tenant: str, priority: str, nice: int,
+                  arrivals: List[float], rid0: int = 0,
+                  per_layer: bool = False) -> List[CopyRequest]:
+    """Weight-load copies per inference request (cold model). With
+    ``per_layer`` the stream is split into layer-granularity transfers
+    (PipeSwitch-style pipelining — also what lets schedulers interleave)."""
+    size = model_bytes(cfg)
+    if not per_layer:
+        return [CopyRequest(rid0 + i, tenant, priority, nice, size, "h2d", t)
+                for i, t in enumerate(arrivals)]
+    n = max(cfg.num_layers, 1)
+    out = []
+    for i, t in enumerate(arrivals):
+        for j in range(n):
+            out.append(CopyRequest(rid0 + i * 1000 + j, tenant, priority,
+                                   nice, size // n, "h2d", t))
+    return out

@@ -1,0 +1,5 @@
+from . import checkpoint, compression, data, optimizer, trainer
+from .data import DataConfig, device_batch, host_shard
+from .optimizer import (AdamWConfig, OptState, adamw_update, init_opt_state,
+                        zero1_pspecs)
+from .trainer import Trainer, TrainerConfig, make_train_step

@@ -1,0 +1,132 @@
+"""Fault-tolerant checkpointing: atomic directory commits, async saves,
+retention, and cross-mesh resharding restore (elastic rescale).
+
+Layout:  <dir>/step_<N>/
+            manifest.json       (step, leaf paths/shapes/dtypes, user meta)
+            arrays.npz          (flat leaf arrays keyed by escaped path)
+         <dir>/step_<N>.tmp...  (staging; renamed atomically on commit)
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for kp, leaf in flat:
+        parts = []
+        for k in kp:
+            if hasattr(k, "key"):
+                parts.append(str(k.key))
+            elif hasattr(k, "idx"):
+                parts.append(str(k.idx))
+            else:
+                parts.append(str(k))
+        out["/".join(parts)] = leaf
+    return out, treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any, meta: Optional[dict] = None,
+         keep: int = 3):
+    """Atomic synchronous save."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat, _ = _flatten(tree)
+    final = os.path.join(ckpt_dir, f"step_{step:010d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    arrays = {k.replace("/", "|"): np.asarray(v) for k, v in flat.items()}
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "leaves": {k: {"shape": list(np.shape(v)),
+                       "dtype": str(np.asarray(v).dtype)}
+                   for k, v in flat.items()},
+        "meta": meta or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)          # atomic commit
+    _retain(ckpt_dir, keep)
+    return final
+
+
+class AsyncCheckpointer:
+    """Overlaps checkpoint I/O with training (one in flight at a time)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, step: int, tree: Any, meta=None):
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        self._thread = threading.Thread(
+            target=save, args=(self.ckpt_dir, step, host_tree, meta, self.keep),
+            daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def _retain(ckpt_dir: str, keep: int):
+    steps = sorted(d for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like_tree: Any, shardings=None):
+    """Restore into the structure of ``like_tree``; if ``shardings`` (a
+    matching tree of NamedShardings on a possibly *different* mesh) is given,
+    leaves are placed with it — this is the elastic-rescale path: a
+    checkpoint written on one mesh restores onto another."""
+    path = os.path.join(ckpt_dir, f"step_{step:010d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat_like, treedef = _flatten(like_tree)
+    leaves = []
+    shard_flat = (jax.tree.leaves(shardings) if shardings is not None
+                  else [None] * len(flat_like))
+    for (k, like), sh in zip(flat_like.items(), shard_flat):
+        arr = data[k.replace("/", "|")]
+        assert list(arr.shape) == list(np.shape(like)), (k, arr.shape,
+                                                         np.shape(like))
+        if sh is not None:
+            leaves.append(jax.device_put(arr, sh))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like_tree), leaves)
+    return tree, manifest
+
+
+def restore_latest(ckpt_dir: str, like_tree: Any, shardings=None):
+    step = latest_step(ckpt_dir)
+    if step is None:
+        return None, None
+    return restore(ckpt_dir, step, like_tree, shardings)

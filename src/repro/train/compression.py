@@ -1,0 +1,57 @@
+"""Error-feedback int8 gradient compression for cross-pod reduction.
+
+At 1000+-node scale the pod-interconnect (DCN) is the scarce link; quantizing
+the cross-pod gradient exchange to int8 with error feedback preserves
+convergence (the residual is re-injected next step) while cutting cross-pod
+bytes 2x vs bf16 / 4x vs fp32. Wired into the train step as an optional
+transform; the dry-run's collective-bytes parse shows the saving.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x):
+    """Per-tensor symmetric int8. Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_tree(grads, err):
+    """Error-feedback compress: returns (dequantized grads, new_err).
+    err carries the quantization residual into the next step."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize_int8(corrected)
+        deq = dequantize(q, s)
+        return deq.astype(g.dtype), corrected - deq
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(tdef, [o[0] for o in out]),
+            jax.tree.unflatten(tdef, [o[1] for o in out]))
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_cross_pod_mean(grads, axis_name: str = "pod"):
+    """Inside shard_map: int8 all-gather across the pod axis, fp32 sum.
+    Cross-pod bytes: n*size_int8 per device vs 2*size_bf16 for a ring
+    all-reduce — a 4x cut at 2 pods."""
+    def one(g):
+        q, s = quantize_int8(g)
+        qs = jax.lax.all_gather(q, axis_name)            # [n_pods, ...] int8
+        ss = jax.lax.all_gather(s, axis_name)
+        return jnp.mean(qs.astype(jnp.float32)
+                        * ss.reshape((-1,) + (1,) * g.ndim), axis=0
+                        ).astype(g.dtype)
+    return jax.tree.map(one, grads)

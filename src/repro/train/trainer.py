@@ -1,0 +1,155 @@
+"""Training loop: jitted sharded train step, fault tolerance (auto-resume
+from the latest atomic checkpoint), straggler watchdog (step-time EMA), and
+elastic restart (restore onto a different mesh via resharding).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from . import checkpoint as ckpt
+from .data import DataConfig, device_batch
+from .optimizer import AdamWConfig, OptState, adamw_update, init_opt_state, zero1_pspecs
+from .compression import ef_compress_tree, init_error_feedback
+from ..configs.base import ModelConfig
+from ..dist.sharding import batch_axes, param_pspecs, use_mesh
+from ..models import io as model_io
+from ..models import transformer as tf
+
+
+@dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    keep: int = 3
+    log_every: int = 10
+    compress_grads: bool = False
+    zero1: bool = True
+    straggler_factor: float = 3.0   # step slower than EMA*factor => flagged
+    donate: bool = True
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    compress: bool = False):
+    def step_fn(params, opt_state, err, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: tf.loss_fn(p, cfg, batch), has_aux=True)(params)
+        if compress:
+            grads, err = ef_compress_tree(grads, err)
+        params, opt_state, om = adamw_update(opt_cfg, grads, opt_state, params)
+        metrics = {**metrics, **om}
+        return params, opt_state, err, metrics
+    return step_fn
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, data_cfg: DataConfig,
+                 opt_cfg: AdamWConfig, tcfg: TrainerConfig, mesh=None,
+                 init_key=None):
+        self.cfg, self.data_cfg, self.opt_cfg, self.tcfg = (
+            cfg, data_cfg, opt_cfg, tcfg)
+        self.mesh = mesh
+        self.step = 0
+        self.straggler_events: list = []
+        self.history: list = []
+        key = init_key if init_key is not None else jax.random.key(0)
+
+        step_fn = make_train_step(cfg, opt_cfg, tcfg.compress_grads)
+        if mesh is not None:
+            with use_mesh(mesh):
+                params = jax.jit(
+                    lambda k: tf.init_params(k, cfg),
+                    out_shardings=param_pspecs(
+                        jax.eval_shape(lambda k: tf.init_params(k, cfg), key),
+                        mesh))(key)
+            pspecs = param_pspecs(params, mesh)
+            ospecs = zero1_pspecs(params, mesh, tcfg.zero1)
+            bax = batch_axes(mesh)
+            bspec = NamedSharding(mesh, P(bax if bax else None))
+            self.batch_sharding = {
+                n: NamedSharding(mesh, P(bax if bax else None))
+                for n, _, _ in model_io.batch_fields(cfg, 1, 1)}
+            espec = pspecs
+            self._jit_step = jax.jit(
+                step_fn,
+                in_shardings=(pspecs, ospecs, espec, None),
+                out_shardings=(pspecs, ospecs, espec, None),
+                donate_argnums=(0, 1, 2) if tcfg.donate else ())
+        else:
+            self.batch_sharding = None
+            self._jit_step = jax.jit(
+                step_fn, donate_argnums=(0, 1, 2) if tcfg.donate else ())
+            params = tf.init_params(key, cfg)
+        self.params = params
+        self.opt_state = init_opt_state(params)
+        self.err = init_error_feedback(params)
+        self._maybe_resume()
+
+    # ------------------------------------------------------------------
+    def _state_tree(self):
+        return {"params": self.params, "opt": self.opt_state._asdict(),
+                "err": self.err}
+
+    def _maybe_resume(self):
+        d = self.tcfg.ckpt_dir
+        if not d:
+            return
+        step = ckpt.latest_step(d)
+        if step is None:
+            return
+        tree, manifest = ckpt.restore(d, step, self._state_tree())
+        self.params = tree["params"]
+        self.opt_state = OptState(tree["opt"]["m"], tree["opt"]["v"],
+                                  tree["opt"]["count"])
+        self.err = tree["err"]
+        self.step = manifest["meta"].get("next_step", step)
+
+    def save(self):
+        if self.tcfg.ckpt_dir:
+            ckpt.save(self.tcfg.ckpt_dir, self.step,
+                      jax.tree.map(np.asarray, self._state_tree()),
+                      meta={"next_step": self.step}, keep=self.tcfg.keep)
+
+    # ------------------------------------------------------------------
+    def run(self, steps: Optional[int] = None):
+        steps = steps if steps is not None else self.tcfg.steps
+        extra = [f for f in model_io.batch_fields(
+            self.cfg, self.data_cfg.global_batch, self.data_cfg.seq_len)
+            if f[0] not in ("tokens", "labels")]
+        ema = None
+        ctx = use_mesh(self.mesh) if self.mesh is not None else _null()
+        with ctx:
+            while self.step < steps:
+                batch = device_batch(self.data_cfg, self.step, extra,
+                                     self.mesh, self.batch_sharding)
+                t0 = time.perf_counter()
+                self.params, self.opt_state, self.err, metrics = \
+                    self._jit_step(self.params, self.opt_state, self.err, batch)
+                loss = float(metrics["loss"])
+                dt = time.perf_counter() - t0
+                if ema is not None and dt > self.tcfg.straggler_factor * ema:
+                    self.straggler_events.append((self.step, dt, ema))
+                ema = dt if ema is None else 0.9 * ema + 0.1 * dt
+                self.history.append({"step": self.step, "loss": loss,
+                                     "time_s": dt})
+                self.step += 1
+                if self.tcfg.ckpt_dir and self.step % self.tcfg.ckpt_every == 0:
+                    self.save()
+        if self.tcfg.ckpt_dir:
+            self.save()
+        return self.history
+
+
+class _null:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False

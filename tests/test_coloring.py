@@ -1,0 +1,107 @@
+"""VRAM-channel coloring stack: hash models, probes (Algo 1-3), granularity,
+MLP fit, colored allocator."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.coloring import (ColoredArena, OutOfColoredMemory, VRAMDevice,
+                                 collect_samples, fit_channel_hash,
+                                 gpu_hash_model, is_channel_conflicted,
+                                 measure_granularity, split_channels)
+
+
+def test_hash_models_cover_channels():
+    for gpu, n in [("tesla-p40", 12), ("rtx-a2000", 6), ("rtx-a5500", 12),
+                   ("tesla-v100", 32)]:
+        hm = gpu_hash_model(gpu)
+        assert hm.num_channels == n
+        addrs = np.arange(0, 4 << 20, 1024)
+        ch = hm.channel_of(addrs)
+        counts = np.bincount(ch, minlength=n)
+        # uniform distribution across the space (paper Fig. 18)
+        assert counts.min() > 0.7 * counts.mean(), (gpu, counts)
+
+
+def test_permutation_hash_is_nonlinear():
+    """XOR-linearity test: h(a) ^ h(b) ^ h(a^b) ^ h(0) == 0 for linear maps;
+    the permutation hash must violate it somewhere (the paper's core
+    observation about P40/A2000-class GPUs)."""
+    hm = gpu_hash_model("tesla-p40")
+    rng = np.random.default_rng(0)
+    a = (rng.integers(0, 4096, 200) * 1024).astype(np.int64)
+    b = (rng.integers(0, 4096, 200) * 1024).astype(np.int64)
+    ha, hb = hm.channel_of(a), hm.channel_of(b)
+    hxor = hm.channel_of(a ^ b)
+    h0 = hm.channel_of(np.zeros(1, np.int64))[0]
+    assert np.any((ha ^ hb ^ hxor ^ h0) != 0)
+
+
+def test_algo1_pairwise_conflict():
+    hm = gpu_hash_model("rtx-a2000")
+    dev = VRAMDevice(hm, seed=3)
+    addrs = np.arange(0, 256 * 1024, 1024)
+    ch = hm.channel_of(addrs)
+    same = np.nonzero(ch == ch[0])[0]
+    diff = np.nonzero(ch != ch[0])[0]
+    assert is_channel_conflicted(dev, int(addrs[same[0]]),
+                                 int(addrs[same[1]]))
+    assert not is_channel_conflicted(dev, int(addrs[same[0]]),
+                                     int(addrs[diff[0]]))
+
+
+def test_reveng_finds_channels_and_granularity():
+    hm = gpu_hash_model("rtx-a2000")
+    dev = VRAMDevice(hm, seed=1)
+    res = collect_samples(dev, 2 << 20, 150, seed=0)
+    assert res.num_channels_found == hm.num_channels
+    assert res.label_accuracy > 0.97
+    assert measure_granularity(dev) == 2048    # A2000: 2 KiB runs (Tab. 7)
+
+
+def test_mlp_fit_high_accuracy():
+    hm = gpu_hash_model("rtx-a2000")
+    rng = np.random.default_rng(0)
+    addrs = (rng.choice(8192, 3000, replace=False) * 1024).astype(np.int64)
+    labels = hm.channel_of(addrs)
+    fit = fit_channel_hash(addrs, labels, 1024, hm.num_channels,
+                           steps=1200, hidden=128, depth=6, n_bits=14, seed=0)
+    assert fit.test_acc > 0.95, fit.test_acc
+
+
+# ---------------------------------------------------------------------------
+# allocator
+# ---------------------------------------------------------------------------
+
+def _arena(gpu="tesla-p40", mb=4):
+    hm = gpu_hash_model(gpu)
+    return ColoredArena(mb << 20, hm.channel_of, hm.num_channels,
+                        hm.granularity), hm
+
+
+def test_allocator_respects_colors():
+    arena, hm = _arena()
+    ls, be = split_channels(hm.num_channels, 1 / 3)
+    a = arena.alloc("ls_w", 512 * 1024, ls)
+    b = arena.alloc("be_w", 256 * 1024, be)
+    assert arena.isolation_violations(a) == 0
+    assert arena.isolation_violations(b) == 0
+    assert set(np.nonzero(arena.channel_histogram(a))[0]).issubset(set(ls))
+    assert set(np.nonzero(arena.channel_histogram(b))[0]).issubset(set(be))
+    arena.release("ls_w")
+    arena.alloc("ls_w2", 512 * 1024, ls)   # reuse freed pages
+
+
+def test_allocator_oom_on_exhausted_colors():
+    arena, hm = _arena(mb=1)
+    ls, be = split_channels(hm.num_channels, 1 / 3)
+    with pytest.raises(OutOfColoredMemory):
+        arena.alloc("big", 10 << 20, be)
+
+
+@given(frac=st.floats(0.05, 0.95))
+@settings(max_examples=20, deadline=None)
+def test_split_channels_property(frac):
+    ls, be = split_channels(12, frac)
+    assert set(ls) | set(be) == set(range(12))
+    assert not (set(ls) & set(be))
+    assert len(be) >= 1 and len(ls) >= 1

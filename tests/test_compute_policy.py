@@ -1,0 +1,39 @@
+"""Compute-policy semantics + elastic mesh partitioner."""
+import pytest
+
+from repro.core.compute import ComputePolicy, ElasticMeshPartitioner
+
+
+def test_sgdrc_partition_sums_to_one():
+    p = ComputePolicy(kind="sgdrc", sm_be=0.3)
+    ls, be = p.alloc(True, True)
+    assert abs(ls + be - 1.0) < 1e-9
+    assert be == pytest.approx(0.3)
+    # elastic lending: all to BE when LS idle
+    assert p.alloc(False, True) == (0.0, 1.0)
+    assert p.alloc(True, False) == (1.0, 0.0)
+
+
+def test_preemption_delays():
+    p = ComputePolicy(kind="sgdrc", tile_quantum_s=25e-6)
+    assert p.preemption_delay(True) == 25e-6
+    assert p.preemption_delay(False) == 0.0
+    t = ComputePolicy(kind="temporal", ctx_switch_s=1e-3)
+    assert t.preemption_delay(True) == 1e-3
+
+
+def test_multistream_sentinel():
+    p = ComputePolicy(kind="multistream")
+    assert p.alloc(True, True) == (-1.0, -1.0)
+    assert p.alloc(False, True) == (0.0, 1.0)
+
+
+def test_elastic_mesh_partitioner():
+    em = ElasticMeshPartitioner(total_chips=256, min_ls=8)
+    a = em.rebalance(0.9)
+    assert a["LS"] + a["BE"] == 256
+    assert a["LS"] >= 8 and a["BE"] >= 1
+    b = em.rebalance(0.01)
+    assert b["LS"] == 8                      # floor respected
+    c = em.rebalance(1.0)
+    assert c["BE"] >= 1                      # BE never starved of all chips

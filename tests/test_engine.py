@@ -1,0 +1,47 @@
+"""Serving engine: LS preemption priority, coloring integration, metrics."""
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.core.coloring import gpu_hash_model
+from repro.core.tenancy import TenantSpec
+from repro.serving import ServingEngine
+
+
+def _engine(coloring=False):
+    eng = ServingEngine(
+        max_seq=24, coloring=coloring,
+        hash_model=gpu_hash_model("rtx-a2000") if coloring else None,
+        arena_bytes=4 << 20)
+    ls = smoke_config("stablelm-1.6b").replace(num_layers=1,
+                                               activation_dtype="float32")
+    be = smoke_config("stablelm-1.6b").replace(num_layers=1,
+                                               activation_dtype="float32")
+    eng.add_tenant(TenantSpec("ls0", "LS", nice=10_000), ls)
+    eng.add_tenant(TenantSpec("be0", "BE", nice=1), be)
+    return eng
+
+
+def test_ls_strict_priority():
+    """With both queues full, every LS request finishes before any BE one."""
+    eng = _engine()
+    rng = np.random.default_rng(0)
+    for _ in range(2):
+        eng.submit("be0", rng.integers(0, 100, 4), max_new=3)
+        eng.submit("ls0", rng.integers(0, 100, 4), max_new=3)
+    eng.run_until_idle()
+    ls_done = [r.t_done for r in eng.tenants["ls0"].done]
+    be_done = [r.t_done for r in eng.tenants["be0"].done]
+    assert len(ls_done) == 2 and len(be_done) == 2
+    assert max(ls_done) < min(be_done)
+
+
+def test_coloring_zero_violations():
+    eng = _engine(coloring=True)
+    rng = np.random.default_rng(1)
+    eng.submit("ls0", rng.integers(0, 100, 4), max_new=2)
+    eng.submit("be0", rng.integers(0, 100, 4), max_new=2)
+    eng.run_until_idle()
+    m = eng.metrics()
+    for name, info in m["_coloring"].items():
+        assert info["violations"] == 0, name
+    assert m["ls0"]["completed"] == 1

@@ -1,0 +1,42 @@
+"""HLO collective parser: shapes, replica groups, wire-byte model."""
+from repro.launch.hlo_metrics import (_group_size, _shape_bytes,
+                                      parse_collectives)
+
+HLO = """
+  %ar = f32[128,256]{1,0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag.1 = bf16[512,64]{1,0} all-gather(%y), replica_groups=[16,32]<=[512] , dimensions={0}
+  %rs = f32[32,64]{1,0} reduce-scatter(%z), replica_groups={{0,1},{2,3}}, to_apply=%add
+  %a2a = bf16[8,8]{1,0} all-to-all(%w), replica_groups={{0,1,2,3,4,5,6,7}}
+  %cp = f32[16]{0} collective-permute(%v), source_target_pairs={{0,1}}
+  %ar2-start = f32[4]{0} all-reduce-start(%q), replica_groups={{0,1}}
+  %ar2-done = f32[4]{0} all-reduce-done(%ar2-start)
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[128,256]") == 128 * 256 * 4
+    assert _shape_bytes("bf16[512,64]") == 512 * 64 * 2
+    assert _shape_bytes("(f32[2,2], bf16[4])") == 16 + 8
+
+
+def test_group_size_formats():
+    assert _group_size("replica_groups={{0,1,2,3}}", 8) == 4
+    assert _group_size("replica_groups=[16,32]<=[512]", 8) == 32
+    assert _group_size("no groups here", 8) == 8
+
+
+def test_parse_collectives_counts_and_wire():
+    st = parse_collectives(HLO, n_devices=512)
+    assert st.counts["all-reduce"] == 2          # ar + ar2-start (done skipped)
+    assert st.counts["all-gather"] == 1
+    assert st.counts["reduce-scatter"] == 1
+    assert st.counts["all-to-all"] == 1
+    assert st.counts["collective-permute"] == 1
+    s_ar = 128 * 256 * 4
+    assert abs(st.wire_bytes["all-reduce"]
+               - (2 * s_ar * 3 / 4 + 2 * 16 * 1 / 2)) < 1e-6
+    s_ag = 512 * 64 * 2
+    assert abs(st.wire_bytes["all-gather"] - s_ag * 31 / 32) < 1e-6
+    s_rs = 32 * 64 * 4
+    assert st.wire_bytes["reduce-scatter"] == s_rs * 1
+    assert st.total_wire_bytes > 0

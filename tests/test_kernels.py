@@ -1,0 +1,182 @@
+"""Pallas kernel validation: shape/dtype sweeps against the pure-jnp oracles
+(interpret mode on CPU), plus hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,Hkv,D", [
+    (1, 128, 4, 4, 64), (2, 256, 8, 2, 64), (1, 128, 4, 1, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, S, H, Hkv, D, dtype):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = _rand(ks[0], (B, S, H, D), dtype)
+    k = _rand(ks[1], (B, S, Hkv, D), dtype)
+    v = _rand(ks[2], (B, S, Hkv, D), dtype)
+    out = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    want = ref.ref_attention(q, k, v)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("window,softcap", [(64, None), (None, 30.0),
+                                            (32, 50.0)])
+def test_flash_attention_window_softcap(window, softcap):
+    B, S, H, D = 1, 128, 2, 64
+    ks = jax.random.split(jax.random.key(1), 3)
+    q, k, v = (_rand(ks[i], (B, S, H, D), jnp.float32) for i in range(3))
+    out = ops.flash_attention(q, k, v, window=window, softcap=softcap,
+                              block_q=32, block_k=32)
+    want = ref.ref_attention(q, k, v, window=window, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_noncausal():
+    B, S, H, D = 1, 64, 2, 64
+    ks = jax.random.split(jax.random.key(2), 3)
+    q, k, v = (_rand(ks[i], (B, S, H, D), jnp.float32) for i in range(3))
+    out = ops.flash_attention(q, k, v, causal=False, block_q=32, block_k=32)
+    want = ref.ref_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,Smax,H,Hkv,D,pos", [
+    (2, 256, 8, 2, 64, 0), (2, 256, 8, 2, 64, 100), (1, 512, 4, 4, 128, 511),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(B, Smax, H, Hkv, D, pos, dtype):
+    ks = jax.random.split(jax.random.key(3), 3)
+    q = _rand(ks[0], (B, H, D), dtype)
+    kc = _rand(ks[1], (B, Smax, Hkv, D), dtype)
+    vc = _rand(ks[2], (B, Smax, Hkv, D), dtype)
+    out = ops.decode_attention(q, kc, vc, jnp.asarray(pos, jnp.int32),
+                               block_k=64)
+    want = ref.ref_decode_attention(q, kc, vc, pos)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# SPT gather / scatter
+# ---------------------------------------------------------------------------
+
+@given(n_pages=st.integers(1, 32), seed=st.integers(0, 100))
+@settings(max_examples=12, deadline=None)
+def test_spt_gather_property(n_pages, seed):
+    rng = np.random.default_rng(seed)
+    n_arena = n_pages + int(rng.integers(0, 16))
+    arena = jnp.asarray(rng.normal(size=(n_arena, 256)).astype(np.float32))
+    spt = jnp.asarray(rng.choice(n_arena, n_pages, replace=False)
+                      .astype(np.int32))
+    out = ops.spt_gather(arena, spt)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.ref_spt_gather(arena, spt)))
+
+
+def test_spt_roundtrip():
+    """scatter(gather(x)) restores the arena pages the SPT references."""
+    rng = np.random.default_rng(0)
+    n_arena, n_pages = 24, 16
+    arena = jnp.asarray(rng.normal(size=(n_arena, 128)).astype(np.float32))
+    spt = jnp.asarray(rng.choice(n_arena, n_pages, replace=False)
+                      .astype(np.int32))
+    logical = ops.spt_gather(arena, spt)
+    back = ops.spt_scatter(logical, spt, n_arena)
+    np.testing.assert_array_equal(np.asarray(back)[np.asarray(spt)],
+                                  np.asarray(arena)[np.asarray(spt)])
+
+
+# ---------------------------------------------------------------------------
+# dual-tenant matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m_ls,m_be,K,N,sm_be", [
+    (128, 256, 128, 128, 0.3), (256, 128, 256, 256, 0.5),
+])
+def test_dual_tenant_matmul(m_ls, m_be, K, N, sm_be):
+    ks = jax.random.split(jax.random.key(4), 4)
+    a_ls = _rand(ks[0], (m_ls, K), jnp.float32)
+    b_ls = _rand(ks[1], (K, N), jnp.float32)
+    a_be = _rand(ks[2], (m_be, K), jnp.float32)
+    b_be = _rand(ks[3], (K, N), jnp.float32)
+    o_ls, o_be = ops.dual_tenant_matmul(a_ls, b_ls, a_be, b_be, sm_be=sm_be,
+                                        block_m=64, block_n=64, block_k=64)
+    w_ls, w_be = ref.ref_dual_tenant_matmul(a_ls, b_ls, a_be, b_be)
+    np.testing.assert_allclose(np.asarray(o_ls), np.asarray(w_ls), rtol=1e-5,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(o_be), np.asarray(w_be), rtol=1e-5,
+                               atol=1e-4)
+
+
+def test_dual_tenant_schedule_quota():
+    """In every scheduling round while both tenants have tiles, BE holds at
+    most floor(sm_be * round) tiles (the SM_BE quota)."""
+    from repro.kernels.dual_tenant_matmul import _schedule
+    order = _schedule(n_ls=16, n_be=64, sm_be=0.25, round_tiles=8)
+    assert [o for o, _ in order].count(0) == 16
+    assert [o for o, _ in order].count(1) == 64
+    # while LS tiles remain, each window of 8 has <= 2 BE tiles
+    upto = max(i for i, (o, _) in enumerate(order) if o == 0)
+    for s in range(0, upto - 8, 8):
+        window = [o for o, _ in order[s:s + 8]]
+        assert window.count(1) <= 2, (s, window)
+
+
+# ---------------------------------------------------------------------------
+# ssd scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,T,H,K,P,chunk", [
+    (1, 128, 2, 16, 32, 32), (2, 64, 4, 8, 8, 16), (1, 256, 1, 64, 64, 64),
+])
+def test_ssd_scan_sweep(B, T, H, K, P, chunk):
+    ks = jax.random.split(jax.random.key(5), 4)
+    q = _rand(ks[0], (B, T, H, K), jnp.float32)
+    k = _rand(ks[1], (B, T, H, K), jnp.float32)
+    v = _rand(ks[2], (B, T, H, P), jnp.float32)
+    log_w = -jnp.abs(_rand(ks[3], (B, T, H, K), jnp.float32)) * 0.2
+    out = ops.ssd_scan(q, k, v, log_w, chunk=chunk)
+    want = ref.ref_ssd_scan(q, k, v, log_w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=8, deadline=None)
+def test_ssd_scan_property_decay_extremes(seed):
+    """With decay ~ 0 (log_w very negative) the scan reduces to per-token
+    kv outer products; with decay = 1 (log_w = 0) it is a running sum."""
+    rng = np.random.default_rng(seed)
+    B, T, H, K, P = 1, 32, 1, 8, 8
+    q = jnp.asarray(rng.normal(size=(B, T, H, K)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, T, H, K)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, T, H, P)).astype(np.float32))
+    zero = jnp.zeros((B, T, H, K), jnp.float32)
+    out = ops.ssd_scan(q, k, v, zero, chunk=8)
+    want = ref.ref_ssd_scan(q, k, v, zero)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)

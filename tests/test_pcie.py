@@ -1,0 +1,107 @@
+"""PCIe schedulers: CFS weighted fairness, preemption bounds, baseline
+behaviours, and the autotuner."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pcie import (Baymax, BusSpec, MultiStream, PCIeCFS, PACKET,
+                             StreamBox, autotune_cfs_period,
+                             closed_loop_requests, poisson_requests,
+                             saturated_throughput, summarize)
+
+BUS = BusSpec()
+H = 0.3
+
+
+def _ls(qps=500, size=4096, nice=10_000, seed=1):
+    return poisson_requests("ls0", "LS", nice, qps=qps, size=size,
+                            direction="h2d", horizon=H, seed=seed)
+
+
+def _be(nice=1, n=1):
+    out = []
+    for k in range(n):
+        out += closed_loop_requests(f"be{k}", nice=nice, size=40 << 20,
+                                    direction="h2d", horizon=H,
+                                    est_rate=BUS.bw_h2d / n,
+                                    start_rid=10_000_000 * (k + 1))
+    return out
+
+
+def test_cfs_beats_baymax_on_ls_p99():
+    ls, be = _ls(), _be()
+    p99_cfs, _, _ = summarize([c for c in PCIeCFS(2048).run(ls + be, BUS, "h2d")
+                               if c.t_done < H])
+    p99_bm, _, _ = summarize([c for c in Baymax().run(ls + be, BUS, "h2d")
+                              if c.t_done < H])
+    assert p99_cfs < p99_bm / 5    # paper: orders of magnitude
+
+
+def test_cfs_matches_streambox_throughput():
+    ls, be = _ls(), _be()
+    _, t_cfs, _ = summarize([c for c in PCIeCFS(2048).run(ls + be, BUS, "h2d")
+                             if c.t_done < H])
+    _, t_sb, _ = summarize([c for c in StreamBox().run(ls + be, BUS, "h2d")
+                            if c.t_done < H])
+    assert t_cfs > 0.9 * t_sb
+
+
+def test_cfs_weighted_shares():
+    """Two saturating BE tenants with nice 3:1 converge to ~3:1 bandwidth."""
+    reqs = []
+    for k, nice in enumerate((3, 1)):
+        reqs += closed_loop_requests(f"be{k}", nice=nice, size=4 << 20,
+                                     direction="h2d", horizon=H,
+                                     est_rate=BUS.bw_h2d,
+                                     start_rid=10_000_000 * (k + 1))
+    comps = [c for c in PCIeCFS(2048).run(reqs, BUS, "h2d") if c.t_done < H]
+    by = {}
+    for c in comps:
+        by[c.req.tenant] = by.get(c.req.tenant, 0) + c.req.size
+    ratio = by["be0"] / by["be1"]
+    assert 2.0 < ratio < 4.5, ratio
+
+
+def test_cfs_ls_latency_bounded_by_quantum():
+    """LS p99 is bounded by ~one fetch quantum + its own transfer."""
+    ls, be = _ls(qps=200), _be()
+    comps = [c for c in PCIeCFS(2048).run(ls + be, BUS, "h2d")
+             if c.t_done < H and c.req.priority == "LS"]
+    p99, _, _ = summarize(comps)
+    quantum_s = 2048 / 2 * PACKET / BUS.bw_h2d + 2 * BUS.call_overhead_s
+    assert p99 < 4 * quantum_s, (p99, quantum_s)
+
+
+def test_baymax_head_of_line_blocking():
+    """An LS request behind an in-flight 40MB BE copy waits ~3.5ms."""
+    ls, be = _ls(qps=100), _be()
+    comps = [c for c in Baymax().run(ls + be, BUS, "h2d")
+             if c.req.priority == "LS"]
+    p99, _, _ = summarize(comps)
+    assert p99 > 2e-3
+
+
+def test_multistream_serializes_per_tenant():
+    """Closed-loop BE through MultiStream still finishes requests (stream
+    semantics), and in-order per tenant."""
+    be = _be()
+    comps = MultiStream().run(be, BUS, "h2d")
+    done = sorted([c for c in comps if c.req.tenant == "be0"],
+                  key=lambda c: c.req.rid)
+    times = [c.t_done for c in done]
+    assert times == sorted(times)
+    assert len(done) >= 2
+
+
+@given(period=st.sampled_from([64, 256, 1024, 4096, 16384]))
+@settings(max_examples=5, deadline=None)
+def test_throughput_monotone_in_period(period):
+    """§6.3: saturated throughput is non-decreasing in cfs_period."""
+    t_small = saturated_throughput(period, BUS, horizon=0.05)
+    t_big = saturated_throughput(period * 4, BUS, horizon=0.05)
+    assert t_big >= 0.95 * t_small
+
+
+def test_autotune_reasonable():
+    period = autotune_cfs_period(BUS, eps=0.05, hi=16384)
+    assert 128 <= period <= 16384

@@ -1,0 +1,76 @@
+"""Contention simulator + controller: policy orderings the paper reports."""
+import math
+
+from repro.configs import get_config
+from repro.core import (ComputePolicy, GPUSimulator, TPU_V5E, Tenant,
+                        grid_search, memory_bound_ops, poisson_trace,
+                        request_kernels)
+
+DEV = TPU_V5E
+H = 4.0
+
+
+def _tenants(n_ls=2, qps=25):
+    ls_k = request_kernels(get_config("qwen3-1.7b"), 1, 128, "prefill", DEV)
+    be_k = request_kernels(get_config("gemma2-9b"), 8, 256, "prefill", DEV)
+    ts = [Tenant(f"ls{i}", "LS", ls_k, arrivals=poisson_trace(qps, H, i + 1))
+          for i in range(n_ls)]
+    ts.append(Tenant("be0", "BE", be_k, closed_loop=True))
+    return ts
+
+
+def _run(policy, coloring):
+    sim = GPUSimulator(DEV, ComputePolicy(kind=policy), coloring=coloring)
+    return sim.run(_tenants(), H)
+
+
+def test_policy_orderings():
+    temporal = _run("temporal", False)
+    spatial = _run("spatial", False)
+    sgdrc = _run("sgdrc", True)
+    # spatial destroys LS latency relative to temporal and sgdrc
+    assert spatial.ls_p99() > 3 * temporal.ls_p99()
+    assert sgdrc.ls_p99() < spatial.ls_p99() / 3
+    # sgdrc BE throughput beats temporal's
+    assert sgdrc.be_throughput() >= temporal.be_throughput()
+
+
+def test_coloring_improves_ls_latency():
+    uncolored = _run("sgdrc", False)
+    colored = _run("sgdrc", True)
+    assert colored.ls_p99() < uncolored.ls_p99()
+
+
+def test_orion_be_collapse_with_ls_concurrency():
+    """Fig. 6: BE throughput under Orion degrades as #LS grows."""
+    def be_at(n_ls):
+        sim = GPUSimulator(DEV, ComputePolicy(kind="orion"))
+        return sim.run(_tenants(n_ls=n_ls, qps=18), H).be_throughput()
+    assert be_at(6) < be_at(1)
+
+
+def test_conservation():
+    """No lost requests: completed + queued == submitted."""
+    sim = GPUSimulator(DEV, ComputePolicy(kind="sgdrc"), coloring=True)
+    ts = _tenants()
+    res = sim.run(ts, H)
+    for tn in res.tenants:
+        if tn.is_ls:
+            total = len(tn.arrivals)
+            assert tn.completed <= total
+            assert tn.completed + len(tn.queue) + \
+                (1 if tn.active_since is not None else 0) == total
+
+
+def test_controller_grid_search_constraint():
+    plan = grid_search(DEV, [get_config("qwen3-1.7b")],
+                       [get_config("gemma2-9b")], pairs_per_model=3)
+    assert plan.max_ls_inflation <= 1.25 + 1e-6
+    assert 0 < plan.sm_be <= 0.5
+    assert set(plan.ls_channels) | set(plan.be_channels) == set(range(16))
+
+
+def test_memory_bound_detection():
+    ops = memory_bound_ops(get_config("qwen3-1.7b"), 1, 128, "prefill", DEV,
+                           thres_dram=0.4)
+    assert ops  # LS small-batch inference has memory-bound ops
