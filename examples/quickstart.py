@@ -2,7 +2,9 @@
 
   1. train a reduced LM for a few steps (loss goes down),
   2. reverse-engineer a simulated GPU's VRAM channel hash and fit the MLP,
-  3. serve one LS + one BE tenant with SGDRC isolation and print p99s.
+  3. serve one LS + one BE tenant through the continuous-batching engine
+     with SGDRC isolation (coloring + a ResourcePlan's BE quantum share)
+     and print per-class p99s.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,6 +13,8 @@ import numpy as np
 from repro.configs import smoke_config
 from repro.core.coloring import (VRAMDevice, collect_samples,
                                  fit_channel_hash, gpu_hash_model)
+from repro.core.controller import grid_search
+from repro.core.simulator import GPU_DEVICES
 from repro.core.tenancy import TenantSpec
 from repro.serving import ServingEngine
 from repro.train import AdamWConfig, DataConfig, Trainer, TrainerConfig
@@ -39,9 +43,14 @@ print(f"[reveng] found {res.num_channels_found} channels "
       f"MLP test acc {fit.test_acc:.3f}")
 
 # -- 3. serve LS + BE with SGDRC isolation -----------------------------------
-eng = ServingEngine(max_seq=24, coloring=True, hash_model=hm,
-                    arena_bytes=8 << 20)
-eng.add_tenant(TenantSpec("ls", "LS", nice=10_000),
+# offline: grid-search the (SM_BE, Ch_BE, Thres_DRAM) plan on a device model;
+# online: the engine lends BE the plan's quantum share and colors KV arenas.
+plan = grid_search(GPU_DEVICES["rtx-a2000"],
+                   [smoke_config("stablelm-1.6b")],
+                   [smoke_config("gemma2-9b")], pairs_per_model=1)
+eng = ServingEngine(max_seq=24, coloring=True, hash_model=hm, plan=plan,
+                    arena_bytes=8 << 20, slots_ls=3, slots_be=2)
+eng.add_tenant(TenantSpec("ls", "LS", nice=10_000, slo_ms=60_000.0),
                smoke_config("stablelm-1.6b").replace(
                    num_layers=1, activation_dtype="float32"))
 eng.add_tenant(TenantSpec("be", "BE", nice=1),
@@ -53,8 +62,10 @@ for _ in range(3):
     eng.submit("be", rng.integers(0, 100, 6), max_new=3)
 eng.run_until_idle()
 m = eng.metrics()
-print(f"[serve] LS p99 {m['ls']['p99_ms']:.0f} ms | "
-      f"BE p99 {m['be']['p99_ms']:.0f} ms | "
+print(f"[serve] plan SM_BE={plan.sm_be:.2f} Ch_BE={plan.ch_be:.2f} | "
+      f"LS p99 {m['_class']['LS']['p99_ms']:.0f} ms "
+      f"(SLO attainment {m['_class']['LS']['slo_attainment']:.0%}) | "
+      f"BE p99 {m['_class']['BE']['p99_ms']:.0f} ms | "
       f"coloring violations: "
       f"{sum(v['violations'] for v in m['_coloring'].values())}")
 print("quickstart OK")

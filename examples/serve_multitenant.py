@@ -1,45 +1,59 @@
 """End-to-end driver (the paper's kind of system is a server): multi-tenant
 DNN inference with batched requests, comparing SGDRC against the baseline
-GPU-sharing policies on the full-size assigned architectures (contention
-simulator) AND running the reduced models for real on the local device.
+GPU-sharing policies on the full-size assigned architectures (sim backend)
+AND running the reduced models for real with continuous batching (jax
+backend) — both through the SAME ServingEngine API, with the offline
+controller's ResourcePlan threaded into each.
 
 Run:  PYTHONPATH=src python examples/serve_multitenant.py
 """
+import json
+
 import numpy as np
 
 from repro.configs import get_config, smoke_config
-from repro.core import (ComputePolicy, GPUSimulator, TPU_V5E, Tenant,
-                        poisson_trace, request_kernels)
+from repro.core.controller import grid_search
 from repro.core.coloring import gpu_hash_model
+from repro.core.simulator import TPU_V5E, poisson_trace
 from repro.core.tenancy import TenantSpec
 from repro.serving import ServingEngine
 
 HORIZON = 5.0
 
-# -- pod-scale what-if on the full configs (simulator) ----------------------
-dev = TPU_V5E
-ls_k = request_kernels(get_config("qwen3-1.7b"), 1, 128, "prefill", dev)
-be_k = request_kernels(get_config("gemma2-9b"), 8, 256, "prefill", dev)
-print(f"{'policy':<22s} {'LS p99 (ms)':>12s} {'BE thpt (samp/s)':>18s}")
+# -- offline phase: derive the ResourcePlan once ----------------------------
+plan = grid_search(TPU_V5E, [smoke_config("qwen3-1.7b")],
+                   [smoke_config("gemma2-9b")], pairs_per_model=2)
+print(f"plan: SM_BE={plan.sm_be:.2f} Ch_BE={plan.ch_be:.2f} "
+      f"Thres_DRAM={plan.thres_dram:.2f}")
+
+# -- pod-scale what-if on the full configs (sim backend) --------------------
+print(f"\n{'policy':<22s} {'LS p99 (ms)':>12s} {'BE thpt (samp/s)':>18s}")
 for policy, coloring in [("temporal", False), ("spatial", False),
                          ("orion", False), ("sgdrc", False),
                          ("sgdrc", True)]:
-    tenants = [
-        Tenant("ls0", "LS", ls_k, arrivals=poisson_trace(30, HORIZON, 1)),
-        Tenant("ls1", "LS", ls_k, arrivals=poisson_trace(30, HORIZON, 2)),
-        Tenant("be0", "BE", be_k, closed_loop=True),
-    ]
-    res = GPUSimulator(dev, ComputePolicy(kind=policy),
-                       coloring=coloring).run(tenants, HORIZON)
+    eng = ServingEngine(backend="sim", device="tpu-v5e", policy=policy,
+                        coloring=coloring, plan=plan)
+    eng.add_tenant(TenantSpec("ls0", "LS", batch_size=1),
+                   get_config("qwen3-1.7b"), sim_seq=128)
+    eng.add_tenant(TenantSpec("ls1", "LS", batch_size=1),
+                   get_config("qwen3-1.7b"), sim_seq=128)
+    eng.add_tenant(TenantSpec("be0", "BE", batch_size=8),
+                   get_config("gemma2-9b"), closed_loop=True, sim_seq=256)
+    for i, name in enumerate(("ls0", "ls1")):
+        for t in poisson_trace(30, HORIZON, i + 1):
+            eng.submit(name, np.zeros(1, np.int32), max_new=0, at=t)
+    eng.run_until_idle(horizon=HORIZON)
+    res = eng.sim_result
     tag = policy + ("+coloring" if coloring else "")
     print(f"{tag:<22s} {res.ls_p99()*1e3:>12.1f} "
           f"{res.be_throughput(8):>18.1f}")
 
-# -- real execution at reduced scale (local device) --------------------------
-print("\nreal-JAX reduced-scale serving (LS preempts BE between steps):")
-eng = ServingEngine(max_seq=20, coloring=True,
+# -- real execution at reduced scale (jax backend) ---------------------------
+print("\nreal-JAX reduced-scale continuous-batching serving "
+      "(plan-driven BE quantum share):")
+eng = ServingEngine(max_seq=20, coloring=True, plan=plan,
                     hash_model=gpu_hash_model("tesla-p40"),
-                    arena_bytes=8 << 20)
+                    arena_bytes=8 << 20, slots_ls=4, slots_be=2)
 eng.add_tenant(TenantSpec("ls:qwen3", "LS", nice=10_000),
                smoke_config("qwen3-1.7b").replace(
                    num_layers=2, activation_dtype="float32"))
@@ -51,5 +65,4 @@ for i in range(4):
     eng.submit("ls:qwen3", rng.integers(0, 200, 6), max_new=4)
     eng.submit("be:gemma2", rng.integers(0, 200, 6), max_new=4)
 eng.run_until_idle()
-import json
 print(json.dumps(eng.metrics(), indent=1))

@@ -1,15 +1,19 @@
 """Model-swapping scenario (paper §8.4): models live in host memory and
 stream over the interconnect before serving; compare PCIe schedulers and
-show the CFS nice-weight knob trading LS latency vs BE throughput.
+show the CFS nice-weight knob trading LS latency vs BE throughput — then
+serve the swapped-in models through the continuous-batching ServingEngine
+(cold-start swap -> plan-driven serving, end to end).
 
 Run:  PYTHONPATH=src python examples/swap_serving.py
 """
 import numpy as np
 
-from repro.configs import get_config
+from repro.configs import get_config, smoke_config
 from repro.core.pcie import (BusSpec, MultiStream, PCIeCFS, StreamBox,
                              summarize)
 from repro.core.simulator import TPU_V5E, apollo_like_trace
+from repro.core.tenancy import TenantSpec
+from repro.serving import ServingEngine
 from repro.serving.swap import (model_bytes, pipelined_serve_time,
                                 swap_requests)
 
@@ -45,3 +49,23 @@ for name, sched, nice in [("multistream", MultiStream(), 1),
     comps = [c for c in sched.run(reqs, bus, "h2d") if c.t_done < HORIZON]
     p99, thpt, _ = summarize(comps)
     print(f"{name:<14s} {p99*1e3:>17.1f} {thpt/2**30:>8.2f}GiB/s")
+
+# -- after the swap: serve the hot models through the batching engine --------
+print("\nswapped-in models serving (continuous batching, reduced scale):")
+eng = ServingEngine(max_seq=16, slots_ls=2, slots_be=2)
+eng.add_tenant(TenantSpec("ls:qwen3", "LS", nice=10_000),
+               smoke_config("qwen3-1.7b").replace(
+                   num_layers=1, activation_dtype="float32"))
+eng.add_tenant(TenantSpec("be:gemma2", "BE", nice=1),
+               smoke_config("gemma2-9b").replace(
+                   num_layers=2, activation_dtype="float32"))
+rng = np.random.default_rng(1)
+for _ in range(3):
+    eng.submit("ls:qwen3", rng.integers(0, 200, 5), max_new=3)
+    eng.submit("be:gemma2", rng.integers(0, 200, 5), max_new=3)
+eng.run_until_idle()
+m = eng.metrics()
+for cls in ("LS", "BE"):
+    c = m["_class"][cls]
+    print(f"  {cls}: {c['completed']} done, p99 {c['p99_ms']:.0f} ms, "
+          f"{c['tokens_per_s']:.1f} tok/s")

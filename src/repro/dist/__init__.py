@@ -1,0 +1,3 @@
+from . import sharding
+from .sharding import (batch_axes, current_mesh, hint, param_pspecs,
+                       set_attn_fallback, use_mesh)

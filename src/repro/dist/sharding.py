@@ -1,0 +1,113 @@
+"""Sharding rules + mesh context for the unified model.
+
+``use_mesh`` installs a process-wide current mesh; ``hint`` applies a
+sharding constraint against it (and degrades to a no-op outside any mesh, so
+single-device tests and the serving engine never pay for it). ``param_pspecs``
+derives a NamedSharding tree for a params pytree with divisibility guards:
+any dim that doesn't divide the model-axis size replicates, so the same rules
+hold on 1x1 test meshes, the 8-device fake mesh of the dry-run tests, and the
+16x16 production mesh.
+
+Conventions:
+  * batch dims shard over ("pod",)+("data",) — see ``batch_axes``,
+  * embeddings shard the vocab dim on "model"; other >=2-D params shard their
+    largest divisible dim on "model"; 1-D params (norm scales) replicate,
+  * attention params honour ``set_attn_fallback``: "headdim" (default) may
+    shard the trailing head_dim, "replicate" never does — the knob the
+    dry-run exposes for archs whose head counts don't divide the mesh.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_CURRENT_MESH = None
+_ATTN_FALLBACK = "headdim"   # "headdim" | "replicate"
+
+
+def set_attn_fallback(mode: str):
+    global _ATTN_FALLBACK
+    assert mode in ("headdim", "replicate"), mode
+    _ATTN_FALLBACK = mode
+
+
+def current_mesh():
+    return _CURRENT_MESH
+
+
+@contextmanager
+def use_mesh(mesh):
+    """Install ``mesh`` as the process-wide mesh for hint()/tracing."""
+    global _CURRENT_MESH
+    prev = _CURRENT_MESH
+    _CURRENT_MESH = mesh
+    try:
+        yield mesh
+    finally:
+        _CURRENT_MESH = prev
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes the batch dim shards over (pod-major)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def hint(x, *axes):
+    """Sharding constraint by mesh-axis names (None = replicate that dim).
+    No-op outside a mesh; axes absent from the mesh (e.g. "expert" on a
+    data/model mesh) or non-divisible dims silently replicate."""
+    mesh = _CURRENT_MESH
+    if mesh is None:
+        return x
+    spec = []
+    for dim, ax in zip(x.shape, axes):
+        if (ax is None or ax not in mesh.axis_names
+                or mesh.shape[ax] <= 1 or dim % mesh.shape[ax] != 0):
+            spec.append(None)
+        else:
+            spec.append(ax)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def _path_str(path) -> str:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return "/".join(out)
+
+
+def param_pspecs(params, mesh):
+    """NamedSharding tree for a params pytree (structure-preserving)."""
+    msize = mesh.shape.get("model", 1)
+    has_model = "model" in mesh.axis_names and msize > 1
+
+    def spec_for(path, leaf):
+        shp = leaf.shape
+        s = [None] * len(shp)
+        if len(shp) < 2 or not has_model:
+            return NamedSharding(mesh, P(*s))
+        name = _path_str(path)
+        # canonical tensor-parallel dim first, then largest divisible dim
+        order = sorted(range(len(shp)), key=lambda i: -shp[i])
+        if "unembed" in name:
+            order = [len(shp) - 1] + [i for i in order if i != len(shp) - 1]
+        elif "embed" in name:           # embed / pos_embed: vocab-dim first
+            order = [0] + [i for i in order if i != 0]
+        skip_last = ("attn" in name and _ATTN_FALLBACK == "replicate")
+        for i in order:
+            if skip_last and i == len(shp) - 1:
+                continue
+            if shp[i] % msize == 0 and shp[i] >= msize:
+                s[i] = "model"
+                break
+        return NamedSharding(mesh, P(*s))
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)

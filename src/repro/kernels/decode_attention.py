@@ -14,6 +14,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .pallas_compat import CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -82,7 +84,7 @@ def decode_attention(q, k_cache, v_cache, pos, *, block_k=128,
                 pltpu.VMEM((G, 1), jnp.float32),
                 pltpu.VMEM((G, D), jnp.float32),
             ]),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(pos_arr, qg, kt, vt)

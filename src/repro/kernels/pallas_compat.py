@@ -1,0 +1,7 @@
+"""Pallas API-skew shim: newer jax renamed ``pltpu.TPUCompilerParams`` to
+``pltpu.CompilerParams``. Import ``CompilerParams`` from here so the kernels
+build against both."""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))

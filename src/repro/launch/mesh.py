@@ -1,19 +1,26 @@
 """Production mesh construction. A FUNCTION, not a module-level constant, so
-importing this module never touches jax device state."""
+importing this module never touches jax device state. ``make_mesh`` papers
+over the jax API skew: newer jax wants explicit ``axis_types``; older
+releases (<= 0.4.x) predate ``jax.sharding.AxisType`` entirely."""
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:
+    from jax.sharding import AxisType
+except ImportError:          # older jax: no explicit-sharding axis types
+    AxisType = None
+
+
+def make_mesh(shape, axes):
+    if AxisType is not None:
+        return jax.make_mesh(tuple(shape), tuple(axes),
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2x16x16 = 512 chips across two pods."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
-
-
-def make_mesh(shape, axes):
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)

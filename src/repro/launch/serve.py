@@ -1,12 +1,15 @@
 """Multi-tenant serving launcher (SGDRC on a local device).
 
     python -m repro.launch.serve --ls qwen3-1.7b --be gemma2-9b \
-        --requests 8 --coloring
+        --requests 8 --coloring --grid-search
 
-Runs reduced-config models for real on the local device through the
-ServingEngine (LS preempts BE at step boundaries; colored KV arenas when
---coloring). For pod-scale what-if analysis use benchmarks/fig12_invram.py
-(contention simulator with the full configs).
+Runs reduced-config models for real through the continuous-batching
+ServingEngine (slot-pool batched prefill/decode; LS preempts BE at step
+boundaries, or lends BE the plan's sm_be quantum share when --grid-search
+derives a ResourcePlan; colored KV arenas when --coloring). With
+--backend sim the same request stream drives the contention simulator
+instead (pod-scale what-if on the full configs; see also
+benchmarks/fig12_invram.py).
 """
 import argparse
 
@@ -21,34 +24,66 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=4)
     ap.add_argument("--coloring", action="store_true")
+    ap.add_argument("--backend", default="jax", choices=["jax", "sim"])
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode slots per tenant (continuous batching)")
+    ap.add_argument("--grid-search", action="store_true",
+                    help="derive a ResourcePlan offline and thread it in")
     ap.add_argument("--gpu", default="tesla-p40",
-                    help="hash-model for the colored arena")
+                    help="hash-model / device model for coloring and sim")
     args = ap.parse_args()
 
-    from ..configs import smoke_config
+    from ..configs import get_config, smoke_config
     from ..core.coloring import gpu_hash_model
+    from ..core.controller import grid_search
+    from ..core.simulator import GPU_DEVICES
     from ..core.tenancy import TenantSpec
     from ..serving import ServingEngine
 
+    plan = None
+    if args.grid_search:
+        dev = GPU_DEVICES[args.gpu]
+        plan = grid_search(dev,
+                           [smoke_config(n) for n in args.ls],
+                           [smoke_config(n) for n in args.be],
+                           pairs_per_model=2)
+        print(f"plan: SM_BE={plan.sm_be:.2f} Ch_BE={plan.ch_be:.2f} "
+              f"Thres_DRAM={plan.thres_dram:.2f} "
+              f"(worst LS inflation {plan.max_ls_inflation:.2f}x)")
+
     eng = ServingEngine(
         max_seq=args.prompt_len + args.max_new + 4,
-        coloring=args.coloring,
-        hash_model=gpu_hash_model(args.gpu) if args.coloring else None)
+        backend=args.backend, plan=plan, coloring=args.coloring,
+        slots_ls=args.slots, slots_be=args.slots, device=args.gpu
+        if args.gpu in GPU_DEVICES else "tpu-v5e",
+        hash_model=gpu_hash_model(args.gpu)
+        if args.coloring and args.backend == "jax" else None)
     rng = np.random.default_rng(0)
+    # jax backend executes reduced (smoke) models for real; the sim backend
+    # models the FULL configs at paper-scale request shapes
+    sim = args.backend == "sim"
     for name in args.ls:
-        cfg = smoke_config(name).replace(activation_dtype="float32")
-        eng.add_tenant(TenantSpec(f"ls:{name}", "LS", nice=10_000), cfg)
+        cfg = (get_config(name) if sim
+               else smoke_config(name).replace(activation_dtype="float32"))
+        eng.add_tenant(TenantSpec(f"ls:{name}", "LS", nice=10_000), cfg,
+                       sim_seq=128 if sim else None)
     for name in args.be:
-        cfg = smoke_config(name).replace(activation_dtype="float32")
-        eng.add_tenant(TenantSpec(f"be:{name}", "BE", nice=1), cfg)
+        cfg = (get_config(name) if sim
+               else smoke_config(name).replace(activation_dtype="float32"))
+        eng.add_tenant(TenantSpec(f"be:{name}", "BE", nice=1, batch_size=8
+                                  if sim else 1), cfg,
+                       sim_seq=256 if sim else None)
     for i in range(args.requests):
         for t in eng.tenants:
             eng.submit(t, rng.integers(0, 256, args.prompt_len),
-                       max_new=args.max_new)
-    steps = eng.run_until_idle()
+                       max_new=args.max_new,
+                       at=0.05 * i if args.backend == "sim" else None)
+    steps = eng.run_until_idle(horizon=args.requests * 0.1 + 2.0
+                               if args.backend == "sim" else None)
     import json
     print(json.dumps(eng.metrics(), indent=1))
-    print(f"engine quanta executed: {steps}")
+    print(f"engine quanta executed: {steps}" if args.backend == "jax"
+          else f"requests completed in sim: {steps}")
 
 
 if __name__ == "__main__":

@@ -178,7 +178,8 @@ def gqa_forward(p, x, cfg, *, layer_kind="global", positions=None, causal=True):
 def gqa_decode(p, x, cfg, cache_k, cache_v, pos, *, layer_kind="global"):
     """One-token decode. x: [B,1,D]; cache_{k,v}: [B,Hkv,Smax,Dh] (KV-major:
     attention-einsum-native layout, no per-step transposes; sequence axis is
-    the sharding axis); pos: scalar.
+    the sharding axis); pos: scalar, or [B] per-row positions (continuous
+    batching: each slot of a decode batch sits at its own sequence offset).
 
     Returns (out [B,1,D], new_cache_k, new_cache_v).
     """
@@ -189,13 +190,13 @@ def gqa_decode(p, x, cfg, cache_k, cache_v, pos, *, layer_kind="global"):
     Dh = cfg.head_dim
     positions = jnp.broadcast_to(jnp.asarray(pos), (B,))[:, None]
     q, k, v = _proj_qkv(p, x, cfg, positions)       # k,v: [B,1,Hkv,Dh]
-    posc = jnp.asarray(pos).reshape(())
-    cache_k = jax.lax.dynamic_update_slice(
-        cache_k, k.transpose(0, 2, 1, 3).astype(cache_k.dtype),
-        (0, 0, posc, 0))
-    cache_v = jax.lax.dynamic_update_slice(
-        cache_v, v.transpose(0, 2, 1, 3).astype(cache_v.dtype),
-        (0, 0, posc, 0))
+    # per-row scatter at each row's position (mask write: supports a vector
+    # pos; rows whose position is out of range simply write nothing)
+    upd = (jnp.arange(Smax)[None, :] == positions)[:, None, :, None]
+    cache_k = jnp.where(upd, k.transpose(0, 2, 1, 3).astype(cache_k.dtype),
+                        cache_k)
+    cache_v = jnp.where(upd, v.transpose(0, 2, 1, 3).astype(cache_v.dtype),
+                        cache_v)
     kv_pos = jnp.arange(Smax)[None, :]
     valid = kv_pos <= positions                     # [B, Smax]
     if layer_kind == "local" and cfg.local_window:
@@ -273,6 +274,7 @@ def mla_decode(p, x, cfg, cache_ckv, cache_krope, pos, **_):
     Scores are computed in latent space: q_eff = q_nope @ wk_b (absorbed), and
     the attention output is re-expanded through wv_b afterwards — the cache
     stays at R + rope floats per token (the paper-relevant serving win).
+    pos: scalar, or [B] per-row positions (continuous batching).
     """
     m = cfg.mla
     B = x.shape[0]
@@ -280,11 +282,9 @@ def mla_decode(p, x, cfg, cache_ckv, cache_krope, pos, **_):
     positions = jnp.broadcast_to(jnp.asarray(pos), (B,))[:, None]
     q_nope, q_rope = _mla_q(p, x, cfg, positions)
     c_kv, k_rope = _mla_latent(p, x, cfg, positions)
-    posc = jnp.asarray(pos).reshape(())
-    cache_ckv = jax.lax.dynamic_update_slice(
-        cache_ckv, c_kv.astype(cache_ckv.dtype), (0, posc, 0))
-    cache_krope = jax.lax.dynamic_update_slice(
-        cache_krope, k_rope.astype(cache_krope.dtype), (0, posc, 0))
+    upd = (jnp.arange(Smax)[None, :] == positions)[:, :, None]   # [B,Smax,1]
+    cache_ckv = jnp.where(upd, c_kv.astype(cache_ckv.dtype), cache_ckv)
+    cache_krope = jnp.where(upd, k_rope.astype(cache_krope.dtype), cache_krope)
     # absorb: q_eff[b,1,h,R]
     q_eff = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["wk_b"])
     scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5

@@ -498,7 +498,9 @@ def init_cache(cfg: ModelConfig, B: int, max_seq: int, dtype=None):
 
 
 def decode_step(params, cfg: ModelConfig, token, cache, pos, ctx_extra=None):
-    """token: [B,1] int32; pos: scalar int32. Returns (logits [B,1,V], cache)."""
+    """token: [B,1] int32; pos: scalar int32 OR [B] int32 per-row positions
+    (continuous batching: every slot of a decode batch advances at its own
+    offset). Returns (logits [B,1,V], cache)."""
     B = token.shape[0]
     positions = jnp.broadcast_to(jnp.asarray(pos), (B,))[:, None]
     x = _embed_tokens(params, cfg, token, positions=positions)

@@ -1,18 +1,35 @@
-"""Multi-tenant serving engine — the runnable (real-JAX) face of SGDRC.
+"""Continuous-batching multi-tenant serving engine — the single entry point
+for SGDRC serving, with two interchangeable backends behind one API.
 
-Executes actual model forwards for LS and BE tenants on the local device,
-applying the paper's policies at the natural TPU preemption boundary (one
-decode/prefill step = one bounded tile quantum):
+**JAX backend** (``backend="jax"``): executes real model forwards on the local
+device with slot-based continuous batching. Each tenant owns a fixed pool of
+decode slots; requests are admitted into free slots and evicted at *step
+boundaries* (one engine quantum = one bounded batched prefill or decode call —
+the TPU analogue of the paper's tile-quantum preemption point). Prompt
+processing is one batched ``prefill_fn`` call per admission group (a jitted
+scan over the prompt), and decode runs batched across all slots of a tenant
+with per-slot sequence positions.
 
-  * LS requests strictly preempt BE *between* steps (elastic multiplexing),
-  * BE runs whenever no LS work is queued (resource lending),
+**Sim backend** (``backend="sim"``): drives the discrete-event
+``core.simulator.GPUSimulator`` with the same request stream, so the paper's
+Fig. 5/6/11/12 scenario sweeps and the real reduced-scale execution share one
+engine API (see benchmarks/fig12_invram.py).
+
+The offline controller's :class:`~repro.core.controller.ResourcePlan` is
+threaded end-to-end: ``plan.sm_be`` becomes the BE *quantum share* — the
+fraction of engine quanta granted to BE tenants while LS work is pending
+(elastic multiplexing: BE gets everything when LS idles, and with no plan BE
+is strictly preempted, the conservative default) — ``plan.ch_be`` sets the
+ColoredArena channel split (and the simulator's hard bandwidth split), and
+``metrics()`` reports per-class SLO attainment / throughput so the plan's
+effect is observable.
+
+Scheduling invariants:
+  * LS quanta strictly precede BE quanta whenever no plan grants BE a share,
   * per-tenant KV caches are bump-allocated from a ColoredArena when coloring
     is enabled (the SPT indirection is exercised by the kernels' tests; the
     engine tracks channel placement and isolation violations),
   * host<->device weight/cache traffic goes through the PCIe CFS.
-
-At pod scale the same engine drives the contention simulator instead of the
-local device (see benchmarks/fig12_invram.py).
 """
 from __future__ import annotations
 
@@ -25,10 +42,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
+from ..core.compute import ComputePolicy
 from ..core.coloring.allocator import ColoredArena, split_channels
+from ..core.controller import ResourcePlan
 from ..core.costmodel import param_count
+from ..core.simulator import (GPU_DEVICES, GPUSimulator, Tenant,
+                              request_kernels)
 from ..core.tenancy import TenantSpec
-from ..models import io as model_io
 from ..models import transformer as tf
 
 
@@ -39,12 +59,19 @@ class Request:
     tokens: np.ndarray             # [S] prompt
     max_new: int
     t_submit: float
+    t_admit: Optional[float] = None   # entered a decode slot
+    t_first: Optional[float] = None   # first output token (TTFT)
     t_done: Optional[float] = None
     output: Optional[list] = None
+    slot: Optional[int] = None
 
     @property
     def latency(self):
         return None if self.t_done is None else self.t_done - self.t_submit
+
+    @property
+    def ttft(self):
+        return None if self.t_first is None else self.t_first - self.t_submit
 
 
 @dataclass
@@ -54,138 +81,391 @@ class _TenantRT:
     params: object
     decode_fn: object
     prefill_fn: object
+    n_slots: int
     queue: List[Request] = field(default_factory=list)
     done: List[Request] = field(default_factory=list)
-    # BE batch accumulation
-    current: Optional[Request] = None
+    # slot-pool decode state (JAX backend)
     cache: object = None
-    pos: int = 0
+    pos: Optional[np.ndarray] = None        # [n_slots] next write position
+    last_tok: Optional[np.ndarray] = None   # [n_slots] last emitted token
+    active: List[Optional[Request]] = field(default_factory=list)
     alloc_name: Optional[str] = None
+    # sim-backend knobs / results
+    closed_loop: bool = False
+    sim_seq: Optional[int] = None
+    max_kernels: int = 24
+    sim_completed: int = 0
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.active)
 
 
-class ServingEngine:
-    def __init__(self, max_seq: int = 128, coloring: bool = False,
-                 ch_be: float = 1 / 3, arena_bytes: int = 64 << 20,
-                 hash_model=None, now_fn=None):
-        self.max_seq = max_seq
-        self.tenants: Dict[str, _TenantRT] = {}
-        self.clock = now_fn or time.perf_counter
-        self._rid = 0
-        self.coloring = coloring
-        self.arena = None
-        if coloring:
-            assert hash_model is not None
-            self.arena = ColoredArena(arena_bytes, hash_model.channel_of,
-                                      hash_model.num_channels,
-                                      hash_model.granularity)
-            self.ls_ch, self.be_ch = split_channels(
-                hash_model.num_channels, ch_be)
+def _scatter_rows(dst_cache, src_cache, slots):
+    """Write the per-request rows of a freshly prefilled cache into the slot
+    cache. ``layers`` leaves are [n_periods, B, ...] (batch axis 1, from the
+    layer scan); ``prefix`` entries are per-layer trees with batch axis 0."""
+    out = dict(dst_cache)
+    if "prefix" in dst_cache:
+        out["prefix"] = [
+            jax.tree.map(lambda d, s: d.at[slots].set(s.astype(d.dtype)),
+                         dp, sp)
+            for dp, sp in zip(dst_cache["prefix"], src_cache["prefix"])]
+    out["layers"] = jax.tree.map(
+        lambda d, s: d.at[:, slots].set(s.astype(d.dtype)),
+        dst_cache["layers"], src_cache["layers"])
+    return out
 
-    # ------------------------------------------------------------------
-    def add_tenant(self, spec: TenantSpec, cfg: ModelConfig, params=None,
-                   key=None):
-        params = params if params is not None else tf.init_params(
-            key if key is not None else jax.random.key(hash(spec.name) % 2**31),
-            cfg)
+
+class _JaxBackend:
+    """Slot-pool continuous batching on the local device."""
+
+    def __init__(self, engine: "ServingEngine"):
+        self.engine = engine
+
+    def add_tenant(self, rt: _TenantRT):
+        eng = self.engine
+        cfg = rt.cfg
 
         def _prefill(p, tokens):
-            logits, aux = tf.forward(p, cfg, {"tokens": tokens})
-            return logits[:, -1]
+            return tf.prefill(p, cfg, {"tokens": tokens}, eng.max_seq)
 
         def _decode(p, tok, cache, pos):
             return tf.decode_step(p, cfg, tok, cache, pos)
 
-        rt = _TenantRT(spec, cfg, params,
-                       decode_fn=jax.jit(_decode), prefill_fn=jax.jit(_prefill))
-        if self.arena is not None:
-            chans = self.ls_ch if spec.is_ls else self.be_ch
-            kv_bytes = int(param_count(cfg) * 0.02) + 1024  # KV arena slice
-            self.arena.alloc(spec.name, kv_bytes, chans)
-            rt.alloc_name = spec.name
-        self.tenants[spec.name] = rt
-        return rt
+        rt.prefill_fn = jax.jit(_prefill)
+        rt.decode_fn = jax.jit(_decode)
+        rt.cache = tf.init_cache(cfg, rt.n_slots, eng.max_seq)
+        rt.pos = np.zeros(rt.n_slots, np.int32)
+        rt.last_tok = np.zeros(rt.n_slots, np.int32)
+        rt.active = [None] * rt.n_slots
 
-    def submit(self, tenant: str, tokens, max_new: int = 8):
-        rt = self.tenants[tenant]
-        self._rid += 1
-        req = Request(self._rid, tenant, np.asarray(tokens, np.int32),
-                      max_new, self.clock())
-        rt.queue.append(req)
-        return req
+    # -- step-boundary admission / eviction ------------------------------
+    def _finish(self, rt: _TenantRT, slot: int):
+        req = rt.active[slot]
+        req.t_done = self.engine.clock()
+        rt.done.append(req)
+        rt.active[slot] = None
+        rt.pos[slot] = 0
+        rt.last_tok[slot] = 0
 
-    # ------------------------------------------------------------------
-    def _start(self, rt: _TenantRT, req: Request):
-        rt.current = req
-        req.output = []
-        toks = jnp.asarray(req.tokens[None, :])
-        logits = rt.prefill_fn(rt.params, toks)
-        nxt = int(jnp.argmax(logits[0]))
-        req.output.append(nxt)
-        rt.cache = tf.init_cache(rt.cfg, 1, self.max_seq,
-                                 dtype=jnp.float32
-                                 if rt.cfg.activation_dtype == "float32"
-                                 else None)
-        # replay prompt into the cache via decode steps (reference path)
-        rt.pos = 0
-        for t in req.tokens:
-            _, rt.cache = rt.decode_fn(rt.params,
-                                       jnp.asarray([[t]], jnp.int32),
-                                       rt.cache, jnp.asarray(rt.pos))
-            rt.pos += 1
-
-    def _step_one(self, rt: _TenantRT) -> bool:
-        """Run one bounded work quantum for this tenant. True if progressed."""
-        if rt.current is None:
-            if not rt.queue:
-                return False
-            self._start(rt, rt.queue.pop(0))
-            return True
-        req = rt.current
-        tok = jnp.asarray([[req.output[-1]]], jnp.int32)
-        logits, rt.cache = rt.decode_fn(rt.params, tok, rt.cache,
-                                        jnp.asarray(rt.pos))
-        rt.pos += 1
-        req.output.append(int(jnp.argmax(logits[0, 0])))
-        if len(req.output) > req.max_new or rt.pos >= self.max_seq - 1:
-            req.t_done = self.clock()
-            rt.done.append(req)
-            rt.current = None
+    def _admit(self, rt: _TenantRT) -> bool:
+        """Fill free slots from the queue: one batched prefill call per
+        prompt-length group (each admitted request gets its first token)."""
+        eng = self.engine
+        free = [s for s, r in enumerate(rt.active) if r is None]
+        take = rt.queue[: len(free)]
+        if not take:
+            return False
+        del rt.queue[: len(take)]
+        by_len: Dict[int, List[Request]] = {}
+        for r in take:
+            by_len.setdefault(len(r.tokens), []).append(r)
+        for L, reqs in by_len.items():
+            toks = jnp.asarray(np.stack([r.tokens for r in reqs]))
+            last_logits, pcache = rt.prefill_fn(rt.params, toks)
+            first = np.asarray(jnp.argmax(last_logits[:, 0], axis=-1))
+            slots = [free.pop(0) for _ in reqs]
+            rt.cache = _scatter_rows(rt.cache, pcache,
+                                     jnp.asarray(slots, jnp.int32))
+            now = eng.clock()
+            for j, req in enumerate(reqs):
+                s = slots[j]
+                req.slot, req.t_admit, req.t_first = s, now, now
+                req.output = [int(first[j])]
+                rt.active[s] = req
+                rt.pos[s] = L
+                rt.last_tok[s] = req.output[0]
+                if len(req.output) >= max(req.max_new, 1) \
+                        or rt.pos[s] >= eng.max_seq:
+                    self._finish(rt, s)
         return True
 
-    # ------------------------------------------------------------------
-    def step(self) -> bool:
-        """One engine quantum: LS first (elastic preemption boundary),
-        BE otherwise (lending)."""
-        ls = [rt for rt in self.tenants.values()
-              if rt.spec.is_ls and (rt.queue or rt.current)]
-        if ls:
-            # round-robin across LS tenants with pending work
-            ls.sort(key=lambda rt: (rt.current is None,
-                                    rt.queue[0].t_submit if rt.queue else 0))
-            return self._step_one(ls[0])
-        for rt in self.tenants.values():
-            if not rt.spec.is_ls and (rt.queue or rt.current):
-                return self._step_one(rt)
-        return False
+    def _decode(self, rt: _TenantRT):
+        """One batched decode across every active slot of this tenant."""
+        eng = self.engine
+        toks = jnp.asarray(rt.last_tok[:, None])
+        logits, rt.cache = rt.decode_fn(rt.params, toks, rt.cache,
+                                        jnp.asarray(rt.pos))
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        for s, req in enumerate(rt.active):
+            if req is None:
+                continue
+            rt.pos[s] += 1
+            tok = int(nxt[s])
+            req.output.append(tok)
+            rt.last_tok[s] = tok
+            if len(req.output) >= max(req.max_new, 1) \
+                    or rt.pos[s] >= eng.max_seq:
+                self._finish(rt, s)
 
-    def run_until_idle(self, max_steps: int = 100_000):
+    def quantum(self, rt: _TenantRT) -> bool:
+        progressed = self._admit(rt)
+        if any(r is not None for r in rt.active):
+            self._decode(rt)
+            progressed = True
+        return progressed
+
+    def run_until_idle(self, max_steps: int = 100_000, horizon=None) -> int:
         n = 0
-        while self.step():
+        while self.engine.step():
             n += 1
             if n >= max_steps:
                 break
         return n
 
+
+class _SimBackend:
+    """Drives the discrete-event contention simulator with the engine's
+    request stream (pod-scale what-if: Figs. 5/6/11/12)."""
+
+    def __init__(self, engine: "ServingEngine", device="tpu-v5e",
+                 policy: str = "sgdrc"):
+        self.engine = engine
+        self.dev = GPU_DEVICES[device] if isinstance(device, str) else device
+        self.policy_kind = policy
+        self.result = None
+
+    def add_tenant(self, rt: _TenantRT):
+        pass   # kernel sequences are derived lazily from the request stream
+
+    def quantum(self, rt: _TenantRT) -> bool:
+        raise RuntimeError("sim backend executes via run_until_idle(horizon=)")
+
+    def run_until_idle(self, max_steps: int = 100_000, horizon=None) -> int:
+        eng = self.engine
+        plan = eng.plan
+        built = []
+        t_max = 0.0
+        for name, rt in eng.tenants.items():
+            pending = sorted(rt.queue, key=lambda r: r.t_submit)
+            arrivals = [r.t_submit for r in pending]
+            if arrivals:
+                t_max = max(t_max, arrivals[-1])
+            if rt.sim_seq is not None:
+                S = rt.sim_seq
+            elif pending:
+                S = len(pending[0].tokens) + pending[0].max_new
+            else:
+                S = eng.max_seq
+            kern = request_kernels(rt.cfg, max(1, rt.spec.batch_size), S,
+                                   "prefill", self.dev, rt.max_kernels)
+            tn = Tenant(name, rt.spec.priority, kern,
+                        arrivals=arrivals or None,
+                        closed_loop=rt.closed_loop)
+            built.append((rt, pending, tn))
+        if horizon is None:
+            horizon = t_max * 1.05 + 1.0
+        sm_be = plan.sm_be if plan is not None else ComputePolicy().sm_be
+        policy = ComputePolicy(kind=self.policy_kind, sm_be=sm_be)
+        sim = GPUSimulator(self.dev, policy, coloring=eng.coloring,
+                           ch_be=eng.ch_be)
+        res = sim.run([tn for _, _, tn in built], horizon)
+        total = 0
+        for rt, pending, tn in built:
+            if tn.closed_loop:
+                rt.sim_completed = tn.completed
+                total += tn.completed
+                continue
+            for req, lat in zip(pending, tn.latencies):
+                req.t_done = req.t_submit + lat
+                req.output = []
+                rt.done.append(req)
+                rt.queue.remove(req)
+                total += 1
+        self.result = res
+        eng.sim_result = res
+        # virtual timelines all start at t=0, so across repeated drains the
+        # widest horizon is the serving window metrics() divides by
+        eng._elapsed = max(eng._elapsed or 0.0, res.horizon)
+        return total
+
+
+class ServingEngine:
+    """One engine, two backends. See module docstring.
+
+    Parameters of note:
+      plan         ResourcePlan from ``controller.grid_search``; sets the BE
+                   quantum share (sm_be) and the channel split (ch_be).
+      backend      "jax" (real execution, continuous batching) | "sim"
+                   (contention simulator; pass arrival times via submit(at=)).
+      slots_ls/be  decode-slot pool size per tenant class (JAX backend).
+      device       DeviceSpec or name for the sim backend.
+      policy       ComputePolicy kind for the sim backend.
+    """
+
+    def __init__(self, max_seq: int = 128, *, backend: str = "jax",
+                 plan: Optional[ResourcePlan] = None, coloring: bool = False,
+                 ch_be: float = 1 / 3, arena_bytes: int = 64 << 20,
+                 hash_model=None, now_fn=None, slots_ls: int = 4,
+                 slots_be: int = 4, device="tpu-v5e", policy: str = "sgdrc"):
+        self.max_seq = max_seq
+        self.tenants: Dict[str, _TenantRT] = {}
+        self.clock = now_fn or time.perf_counter
+        self._t0 = self.clock()     # epoch for sim-backend virtual arrivals
+        self._rid = 0
+        self.plan = plan
+        self.coloring = coloring
+        self.ch_be = plan.ch_be if plan is not None else ch_be
+        # BE quantum share: fraction of engine quanta BE receives while LS
+        # work is pending (None/0 -> strict LS priority, the seed behaviour)
+        self.sm_be = plan.sm_be if plan is not None else 0.0
+        self._be_credit = 0.0
+        self.slots_ls, self.slots_be = slots_ls, slots_be
+        self.events: List[tuple] = []   # (quantum_idx, tenant, class)
+        self._step_idx = 0
+        self.sim_result = None
+        self._elapsed = None
+        self.arena = None
+        if backend == "jax":
+            self.backend = _JaxBackend(self)
+        elif backend == "sim":
+            self.backend = _SimBackend(self, device=device, policy=policy)
+        else:
+            raise ValueError(f"unknown backend {backend!r}")
+        self.backend_name = backend
+        if coloring and backend == "jax":
+            assert hash_model is not None
+            self.arena = ColoredArena(arena_bytes, hash_model.channel_of,
+                                      hash_model.num_channels,
+                                      hash_model.granularity)
+            self.ls_ch, self.be_ch = split_channels(
+                hash_model.num_channels, self.ch_be)
+
+    # ------------------------------------------------------------------
+    def add_tenant(self, spec: TenantSpec, cfg: ModelConfig, params=None,
+                   key=None, n_slots: Optional[int] = None,
+                   closed_loop: bool = False, sim_seq: Optional[int] = None,
+                   max_kernels: int = 24):
+        if params is None and self.backend_name == "jax":
+            params = tf.init_params(
+                key if key is not None
+                else jax.random.key(hash(spec.name) % 2**31), cfg)
+        rt = _TenantRT(spec, cfg, params, decode_fn=None, prefill_fn=None,
+                       n_slots=n_slots or (self.slots_ls if spec.is_ls
+                                           else self.slots_be),
+                       closed_loop=closed_loop, sim_seq=sim_seq,
+                       max_kernels=max_kernels)
+        self.backend.add_tenant(rt)
+        if self.arena is not None:
+            chans = self.ls_ch if spec.is_ls else self.be_ch
+            # KV arena slice scales with the slot pool (continuous batching)
+            kv_bytes = int(param_count(cfg) * 0.02) * rt.n_slots + 1024
+            self.arena.alloc(spec.name, kv_bytes, chans)
+            rt.alloc_name = spec.name
+        self.tenants[spec.name] = rt
+        return rt
+
+    def submit(self, tenant: str, tokens, max_new: int = 8, at=None):
+        """Queue a request. ``at`` overrides the submit timestamp (virtual
+        arrival time for the sim backend's scenario traces). Sim-backend
+        submissions without ``at`` default to engine-epoch-relative time, so
+        the simulated horizon starts near t=0 rather than at the process
+        uptime perf_counter() reports."""
+        rt = self.tenants[tenant]
+        self._rid += 1
+        if at is not None:
+            t = float(at)
+        elif self.backend_name == "sim":
+            t = self.clock() - self._t0
+        else:
+            t = self.clock()
+        req = Request(self._rid, tenant, np.asarray(tokens, np.int32),
+                      max_new, t)
+        rt.queue.append(req)
+        return req
+
+    # ------------------------------------------------------------------
+    def _pick(self, rts: List[_TenantRT]) -> _TenantRT:
+        """Earliest outstanding request first (FIFO across tenants)."""
+        def key(rt):
+            ts = [r.t_submit for r in rt.queue]
+            ts += [r.t_submit for r in rt.active if r is not None]
+            return min(ts) if ts else float("inf")
+        return min(rts, key=key)
+
+    def step(self) -> bool:
+        """One engine quantum (JAX backend): choose a tenant class via the
+        plan's BE quantum share, then run one batched prefill-or-decode
+        quantum for one tenant of that class. LS strictly preempts BE at
+        this boundary when no plan grants BE a share."""
+        ls = [rt for rt in self.tenants.values()
+              if rt.spec.is_ls and rt.has_work()]
+        be = [rt for rt in self.tenants.values()
+              if not rt.spec.is_ls and rt.has_work()]
+        if ls and be and self.sm_be > 0:
+            # deficit counter: BE receives sm_be of contended quanta
+            self._be_credit += self.sm_be
+            if self._be_credit >= 1.0:
+                self._be_credit -= 1.0
+                pick = be
+            else:
+                pick = ls
+        elif ls:
+            pick = ls
+        elif be:
+            pick = be   # resource lending: BE runs at full rate when LS idles
+        else:
+            return False
+        rt = self._pick(pick)
+        ran = self.backend.quantum(rt)
+        if ran:
+            self.events.append((self._step_idx,
+                                rt.spec.name, rt.spec.priority))
+            self._step_idx += 1
+        return ran
+
+    def run_until_idle(self, max_steps: int = 100_000, horizon=None) -> int:
+        """JAX backend: run quanta until no tenant has work (returns #quanta).
+        Sim backend: build tenants from the submitted stream, run the
+        simulator over ``horizon`` and write completions back (returns
+        #completed requests; the raw SimResult lands in ``self.sim_result``)."""
+        t0 = self.clock()
+        n = self.backend.run_until_idle(max_steps=max_steps, horizon=horizon)
+        if self.backend_name == "jax":
+            # accumulate across calls: metrics() divides cumulative
+            # completions by cumulative serving time
+            self._elapsed = (self._elapsed or 0.0) + (self.clock() - t0)
+        return n
+
     # ------------------------------------------------------------------
     def metrics(self):
         out = {}
+        cls = {"LS": {"done": [], "tokens": 0, "slo_ok": 0, "slo_n": 0,
+                      "completed": 0},
+               "BE": {"done": [], "tokens": 0, "slo_ok": 0, "slo_n": 0,
+                      "completed": 0}}
         for name, rt in self.tenants.items():
             lats = [r.latency for r in rt.done if r.latency is not None]
             out[name] = {
-                "completed": len(rt.done),
+                "completed": len(rt.done) + rt.sim_completed,
                 "p50_ms": float(np.percentile(lats, 50) * 1e3) if lats else None,
                 "p99_ms": float(np.percentile(lats, 99) * 1e3) if lats else None,
             }
+            c = cls[rt.spec.priority]
+            c["done"] += lats
+            c["completed"] += len(rt.done) + rt.sim_completed
+            c["tokens"] += sum(len(r.output or ()) for r in rt.done)
+            if rt.spec.slo_ms is not None:
+                c["slo_n"] += len(lats)
+                c["slo_ok"] += sum(l * 1e3 <= rt.spec.slo_ms for l in lats)
+        elapsed = self._elapsed
+        out["_class"] = {}
+        for pri, c in cls.items():
+            lats = c["done"]
+            out["_class"][pri] = {
+                "completed": c["completed"],
+                "p50_ms": float(np.percentile(lats, 50) * 1e3) if lats else None,
+                "p99_ms": float(np.percentile(lats, 99) * 1e3) if lats else None,
+                "throughput_rps": (c["completed"] / elapsed
+                                   if elapsed else None),
+                "tokens_per_s": (c["tokens"] / elapsed if elapsed else None),
+                "slo_attainment": (c["slo_ok"] / c["slo_n"]
+                                   if c["slo_n"] else None),
+            }
+        if self.plan is not None:
+            out["_plan"] = {"sm_be": self.plan.sm_be,
+                            "ch_be": self.plan.ch_be,
+                            "thres_dram": self.plan.thres_dram}
         if self.arena is not None:
             out["_coloring"] = {
                 name: {"violations": self.arena.isolation_violations(a),

@@ -2,7 +2,7 @@
 MLP fit, colored allocator."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.coloring import (ColoredArena, OutOfColoredMemory, VRAMDevice,
                                  collect_samples, fit_channel_hash,
@@ -58,6 +58,7 @@ def test_reveng_finds_channels_and_granularity():
     assert measure_granularity(dev) == 2048    # A2000: 2 KiB runs (Tab. 7)
 
 
+@pytest.mark.slow
 def test_mlp_fit_high_accuracy():
     hm = gpu_hash_model("rtx-a2000")
     rng = np.random.default_rng(0)

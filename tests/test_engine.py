@@ -1,30 +1,22 @@
 """Serving engine: LS preemption priority, coloring integration, metrics."""
 import numpy as np
 
-from repro.configs import smoke_config
-from repro.core.coloring import gpu_hash_model
 from repro.core.tenancy import TenantSpec
 from repro.serving import ServingEngine
 
 
-def _engine(coloring=False):
-    eng = ServingEngine(
-        max_seq=24, coloring=coloring,
-        hash_model=gpu_hash_model("rtx-a2000") if coloring else None,
-        arena_bytes=4 << 20)
-    ls = smoke_config("stablelm-1.6b").replace(num_layers=1,
-                                               activation_dtype="float32")
-    be = smoke_config("stablelm-1.6b").replace(num_layers=1,
-                                               activation_dtype="float32")
-    eng.add_tenant(TenantSpec("ls0", "LS", nice=10_000), ls)
-    eng.add_tenant(TenantSpec("be0", "BE", nice=1), be)
+def _engine(tiny_cfg, coloring=False, hash_model=None, **kw):
+    eng = ServingEngine(max_seq=24, coloring=coloring, hash_model=hash_model,
+                        arena_bytes=4 << 20, **kw)
+    eng.add_tenant(TenantSpec("ls0", "LS", nice=10_000), tiny_cfg)
+    eng.add_tenant(TenantSpec("be0", "BE", nice=1), tiny_cfg)
     return eng
 
 
-def test_ls_strict_priority():
-    """With both queues full, every LS request finishes before any BE one."""
-    eng = _engine()
-    rng = np.random.default_rng(0)
+def test_ls_strict_priority(tiny_cfg, rng):
+    """With both queues full and no plan, every LS request finishes before
+    any BE one (strict preemption at step boundaries)."""
+    eng = _engine(tiny_cfg)
     for _ in range(2):
         eng.submit("be0", rng.integers(0, 100, 4), max_new=3)
         eng.submit("ls0", rng.integers(0, 100, 4), max_new=3)
@@ -35,9 +27,8 @@ def test_ls_strict_priority():
     assert max(ls_done) < min(be_done)
 
 
-def test_coloring_zero_violations():
-    eng = _engine(coloring=True)
-    rng = np.random.default_rng(1)
+def test_coloring_zero_violations(tiny_cfg, rng, fake_hash_model):
+    eng = _engine(tiny_cfg, coloring=True, hash_model=fake_hash_model)
     eng.submit("ls0", rng.integers(0, 100, 4), max_new=2)
     eng.submit("be0", rng.integers(0, 100, 4), max_new=2)
     eng.run_until_idle()
@@ -45,3 +36,20 @@ def test_coloring_zero_violations():
     for name, info in m["_coloring"].items():
         assert info["violations"] == 0, name
     assert m["ls0"]["completed"] == 1
+
+
+def test_class_metrics_and_slots(tiny_cfg, rng):
+    """Continuous batching: more requests than slots complete, and the
+    per-class rollup reports throughput + latency percentiles."""
+    eng = ServingEngine(max_seq=24, slots_ls=2)
+    eng.add_tenant(TenantSpec("ls0", "LS", slo_ms=60_000.0), tiny_cfg)
+    for _ in range(5):
+        eng.submit("ls0", rng.integers(0, 100, 4), max_new=3)
+    eng.run_until_idle()
+    m = eng.metrics()
+    assert m["ls0"]["completed"] == 5
+    cls = m["_class"]["LS"]
+    assert cls["completed"] == 5
+    assert cls["throughput_rps"] > 0
+    assert cls["tokens_per_s"] > 0
+    assert cls["slo_attainment"] == 1.0

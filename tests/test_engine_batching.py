@@ -1,0 +1,177 @@
+"""Continuous-batching engine: batched decode equivalence with the seed's
+sequential greedy path, step-boundary preemption under load, and the
+ResourcePlan round-trip from grid_search into engine scheduling/metrics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.controller import ResourcePlan, grid_search
+from repro.core.simulator import DeviceSpec
+from repro.core.tenancy import TenantSpec
+from repro.models import transformer as tf
+from repro.serving import ServingEngine
+
+MAX_SEQ = 24
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    from repro.configs import smoke_config
+    cfg = smoke_config("stablelm-1.6b").replace(num_layers=1,
+                                                activation_dtype="float32")
+    return cfg, tf.init_params(jax.random.key(7), cfg)
+
+
+def _seed_sequential_greedy(cfg, params, tokens, max_new):
+    """The seed engine's reference path: first token from the full forward,
+    prompt replayed token-by-token into the cache, then greedy decode."""
+    toks = jnp.asarray(np.asarray(tokens)[None, :])
+    logits, _ = tf.forward(params, cfg, {"tokens": toks})
+    out = [int(jnp.argmax(logits[0, -1]))]
+    cache = tf.init_cache(cfg, 1, MAX_SEQ, dtype=jnp.float32)
+    pos = 0
+    for t in tokens:
+        _, cache = tf.decode_step(params, cfg, jnp.asarray([[t]], jnp.int32),
+                                  cache, jnp.asarray(pos))
+        pos += 1
+    while len(out) < max_new:
+        lg, cache = tf.decode_step(params, cfg,
+                                   jnp.asarray([[out[-1]]], jnp.int32),
+                                   cache, jnp.asarray(pos))
+        pos += 1
+        out.append(int(jnp.argmax(lg[0, 0])))
+    return out
+
+
+def test_batched_decode_matches_sequential(tiny):
+    """Slot-batched decode (mixed prompt lengths, mixed positions) emits
+    token-for-token the seed sequential greedy output."""
+    cfg, params = tiny
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, 100, L) for L in (4, 6, 4, 5)]
+    refs = [_seed_sequential_greedy(cfg, params, p, 5) for p in prompts]
+
+    eng = ServingEngine(max_seq=MAX_SEQ, slots_ls=4)
+    eng.add_tenant(TenantSpec("ls0", "LS"), cfg, params=params)
+    reqs = [eng.submit("ls0", p, max_new=5) for p in prompts]
+    eng.run_until_idle()
+    for req, ref in zip(reqs, refs):
+        assert req.output == ref
+
+
+def test_ls_preempts_be_at_step_boundaries(tiny):
+    """Under load with no plan, an LS arrival takes the very next quantum;
+    BE resumes only after LS drains (strict preemption at step boundaries)."""
+    cfg, params = tiny
+    rng = np.random.default_rng(5)
+    eng = ServingEngine(max_seq=MAX_SEQ)
+    eng.add_tenant(TenantSpec("ls0", "LS"), cfg, params=params)
+    eng.add_tenant(TenantSpec("be0", "BE"), cfg, params=params)
+    eng.submit("be0", rng.integers(0, 100, 4), max_new=12)
+    for _ in range(3):     # BE mid-request across several quanta
+        assert eng.step()
+    eng.submit("ls0", rng.integers(0, 100, 4), max_new=4)
+    eng.submit("ls0", rng.integers(0, 100, 4), max_new=4)
+    eng.run_until_idle()
+    classes = [c for _, _, c in eng.events]
+    first_ls = classes.index("LS")
+    last_ls = len(classes) - 1 - classes[::-1].index("LS")
+    assert first_ls == 3                      # LS preempted immediately
+    assert "BE" not in classes[first_ls:last_ls + 1]
+    assert eng.tenants["be0"].done[0].output is not None   # BE still finished
+
+
+def _tiny_plan(sm_be=0.3, ch_be=1 / 3):
+    n = 16
+    n_be = max(1, round(n * ch_be))
+    return ResourcePlan(sm_be=sm_be, ch_be=ch_be, thres_dram=0.4,
+                        ls_channels=tuple(range(n - n_be)),
+                        be_channels=tuple(range(n - n_be, n)),
+                        max_ls_inflation=1.2)
+
+
+def test_plan_changes_be_scheduling(tiny):
+    """The same workload with a plan interleaves BE quanta among LS quanta
+    (elastic lending at sm_be share); without a plan BE is strictly
+    starved until LS drains."""
+    cfg, params = tiny
+
+    def contended_classes(plan):
+        rng = np.random.default_rng(9)
+        eng = ServingEngine(max_seq=MAX_SEQ, plan=plan)
+        eng.add_tenant(TenantSpec("ls0", "LS"), cfg, params=params)
+        eng.add_tenant(TenantSpec("be0", "BE"), cfg, params=params)
+        for _ in range(3):
+            eng.submit("ls0", rng.integers(0, 100, 4), max_new=10)
+        eng.submit("be0", rng.integers(0, 100, 4), max_new=10)
+        eng.run_until_idle()
+        classes = [c for _, _, c in eng.events]
+        last_ls = len(classes) - 1 - classes[::-1].index("LS")
+        return classes[:last_ls + 1]
+
+    strict = contended_classes(None)
+    shared = contended_classes(_tiny_plan(sm_be=0.5))
+    assert "BE" not in strict                 # seed behaviour preserved
+    n_be = shared.count("BE")
+    assert n_be > 0                           # plan demonstrably lends quanta
+    # deficit counter: BE gets the sm_be share of contended quanta
+    assert n_be == pytest.approx(len(shared) * 0.5, abs=2)
+
+
+def test_grid_search_plan_roundtrip(tiny):
+    """A ResourcePlan straight out of grid_search drives the engine: ch_be
+    reaches the arena split, sm_be reaches the scheduler, and metrics()
+    reports the plan."""
+    cfg, params = tiny
+    dev = DeviceSpec("test-dev", 1e12, 4e11, 12)
+    plan = grid_search(dev, [cfg], [cfg], pairs_per_model=1,
+                       sm_grid=(0.4,), ch_grid=(1 / 3,), thres_grid=(0.4,))
+    assert isinstance(plan, ResourcePlan)
+
+    class FourChan:
+        num_channels = 12
+        granularity = 1024
+
+        def channel_of(self, addrs):
+            return (np.asarray(addrs, np.int64) // 1024) % 12
+
+    eng = ServingEngine(max_seq=MAX_SEQ, plan=plan, coloring=True,
+                        hash_model=FourChan(), arena_bytes=8 << 20)
+    assert eng.sm_be == plan.sm_be
+    assert eng.ch_be == plan.ch_be
+    assert len(eng.be_ch) == max(1, round(12 * plan.ch_be))
+    eng.add_tenant(TenantSpec("ls0", "LS", slo_ms=120_000.0), cfg,
+                   params=params)
+    eng.add_tenant(TenantSpec("be0", "BE"), cfg, params=params)
+    rng = np.random.default_rng(11)
+    eng.submit("ls0", rng.integers(0, 100, 4), max_new=3)
+    eng.submit("be0", rng.integers(0, 100, 4), max_new=3)
+    eng.run_until_idle()
+    m = eng.metrics()
+    assert m["_plan"]["sm_be"] == plan.sm_be
+    assert m["_plan"]["ch_be"] == plan.ch_be
+    for info in m["_coloring"].values():
+        assert info["violations"] == 0
+    assert m["_class"]["LS"]["slo_attainment"] == 1.0
+
+
+def test_sim_backend_same_request_stream(tiny):
+    """The sim backend consumes the same submit() stream and produces
+    completions + class metrics without touching the device."""
+    cfg, _ = tiny
+    eng = ServingEngine(max_seq=MAX_SEQ, backend="sim", device="rtx-a5500",
+                        policy="sgdrc", coloring=True)
+    eng.add_tenant(TenantSpec("ls0", "LS", batch_size=1), cfg, sim_seq=64)
+    eng.add_tenant(TenantSpec("be0", "BE", batch_size=4), cfg,
+                   closed_loop=True, sim_seq=128)
+    for t in np.linspace(0.0, 1.0, 20):
+        eng.submit("ls0", np.zeros(8, np.int32), max_new=4, at=float(t))
+    done = eng.run_until_idle(horizon=2.0)
+    assert done > 0
+    m = eng.metrics()
+    assert m["ls0"]["completed"] > 0
+    assert m["be0"]["completed"] > 0          # closed-loop BE made progress
+    assert m["_class"]["LS"]["p99_ms"] is not None
+    assert eng.sim_result is not None
+    assert eng.sim_result.be_throughput() > 0

@@ -1,5 +1,7 @@
 """Per-architecture smoke tests: reduced config, one forward + one train-style
-grad step on CPU; assert shapes and no NaNs. Plus decode-path consistency."""
+grad step on CPU; assert shapes and no NaNs. Plus decode-path consistency.
+Configs/params come from the cached ``smoke_model`` conftest factory so the
+three tests per arch share one init."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -12,10 +14,8 @@ ALL = sorted(ARCHS)
 
 
 @pytest.mark.parametrize("name", ALL)
-def test_forward_shapes_no_nans(name):
-    cfg = smoke_config(name)
-    key = jax.random.key(0)
-    params = tf.init_params(key, cfg)
+def test_forward_shapes_no_nans(name, smoke_model):
+    cfg, params = smoke_model(name, 0)
     batch = io.make_batch(cfg, B=2, S=16)
     logits, aux = jax.jit(lambda p, b: tf.forward(p, cfg, b))(params, batch)
     assert logits.shape == (2, 16, cfg.vocab_size)
@@ -23,9 +23,8 @@ def test_forward_shapes_no_nans(name):
 
 
 @pytest.mark.parametrize("name", ALL)
-def test_train_step_grads_finite(name):
-    cfg = smoke_config(name)
-    params = tf.init_params(jax.random.key(1), cfg)
+def test_train_step_grads_finite(name, smoke_model):
+    cfg, params = smoke_model(name, 0)
     batch = io.make_batch(cfg, B=2, S=8)
 
     @jax.jit

@@ -2,7 +2,7 @@
 behaviours, and the autotuner."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.pcie import (Baymax, BusSpec, MultiStream, PCIeCFS, PACKET,
                              StreamBox, autotune_cfs_period,

@@ -7,14 +7,14 @@ import pytest
 
 from repro.configs import ARCHS, get_config, smoke_config
 from repro.dist.sharding import hint, param_pspecs, use_mesh
+from repro.launch.mesh import make_mesh
 from repro.models import transformer as tf
 
 
 def _mesh():
     if jax.device_count() < 1:
         pytest.skip("no devices")
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 @pytest.mark.parametrize("name", sorted(ARCHS))
@@ -53,9 +53,7 @@ def test_param_pspecs_prod_mesh_divisibility():
     """Stronger: run the rules against a production-shaped mesh built from
     fake devices if available, else skip."""
     try:
-        mesh = jax.make_mesh(
-            (1, 1), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((1, 1), ("data", "model"))
     except Exception:
         pytest.skip("cannot build mesh")
     cfg = get_config("qwen3-1.7b")

@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import smoke_config
 from repro.train import (AdamWConfig, DataConfig, Trainer, TrainerConfig,
@@ -98,10 +98,10 @@ def test_checkpoint_resharding_restore():
     with explicit shardings."""
     os.environ.setdefault("XLA_FLAGS", "")
     from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import make_mesh
     if jax.device_count() < 1:
         pytest.skip("no devices")
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("model",))
     with tempfile.TemporaryDirectory() as d:
         tree = {"w": np.arange(8, dtype=np.float32)}
         ckpt.save(d, 1, tree)
