@@ -1,0 +1,132 @@
+"""Decode-path KV traffic bench: cache-*write* strategies (whole-row
+mask-scatter vs ``dynamic_update_slice`` vs paged page-pool append) and
+cache-*read* strategies (full-window jnp attention vs the ragged flash-decode
+kernel) across Smax, emitting ``BENCH_decode.json``.
+
+Bytes-moved comes from XLA's HLO cost analysis (``launch.hlo_metrics``) on
+donated-buffer jits — donation is what lets the one-token writes show their
+true in-place cost instead of a copy of the whole cache. Wall-clock rows are
+CPU/interpret correctness-path numbers (same caveat as kernels_bench);
+the bytes columns are the paper-relevant signal: per-token write traffic is
+O(Smax) for mask-scatter and O(1) for DUS/paged.
+
+``--smoke`` runs tiny shapes only (CI: the perf path must at least execute
+on CPU JAX every PR). ``--out PATH`` overrides the JSON location.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.launch.hlo_metrics import compiled_metrics
+
+from .common import Rows, timeit
+
+
+def _bytes(fn, *args, donate=(0,)):
+    comp = jax.jit(fn, donate_argnums=donate).lower(*args).compile()
+    return compiled_metrics(comp, 1)["bytes_accessed"]
+
+
+def _write_fns(B, Hkv, Dh, Smax, ps):
+    def scatter(cache, new, pos):
+        upd = (jnp.arange(Smax)[None, :] == pos[:, None])[:, None, :, None]
+        return jnp.where(upd, new, cache)
+
+    def dus(cache, new, p0):
+        return jax.lax.dynamic_update_slice(cache, new, (0, 0, p0, 0))
+
+    def paged(pool, new, phys, off):
+        return pool.at[phys, :, off, :].set(new[:, :, 0, :], mode="drop")
+
+    return scatter, dus, paged
+
+
+def bench_writes(rows, out, B, Hkv, Dh, Smax, ps):
+    cache = jnp.zeros((B, Hkv, Smax, Dh), jnp.float32)
+    new = jnp.ones((B, Hkv, 1, Dh), jnp.float32)
+    pos = jnp.arange(B, dtype=jnp.int32)
+    pool = jnp.zeros((B * Smax // ps, Hkv, ps, Dh), jnp.float32)
+    scatter, dus, paged = _write_fns(B, Hkv, Dh, Smax, ps)
+    token_bytes = 2 * Hkv * Dh * 4          # k+v, f32
+
+    r = {"Smax": Smax, "B": B, "token_bytes": token_bytes}
+    r["scatter_bytes"] = _bytes(scatter, cache, new, pos)
+    r["dus_bytes"] = _bytes(dus, cache, new, jnp.asarray(0, jnp.int32))
+    r["paged_bytes"] = _bytes(paged, pool, new, pos, pos)
+    for name, fn, args in [
+            ("scatter", jax.jit(scatter), (cache, new, pos)),
+            ("dus", jax.jit(dus), (cache, new, jnp.asarray(0, jnp.int32))),
+            ("paged", jax.jit(paged), (pool, new, pos, pos))]:
+        us = timeit(lambda: fn(*args).block_until_ready())
+        r[f"{name}_us"] = us
+        r[f"{name}_tokens_per_s"] = B / (us * 1e-6)
+        rows.add(f"decode/write_{name}_S{Smax}", us,
+                 f"bytes={r[f'{name}_bytes']:.0f}")
+    out["write"].append(r)
+
+
+def bench_reads(rows, out, B, H, Hkv, Dh, Smax, block_k, interpret):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, H, Dh), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, Smax, Hkv, Dh), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, Smax, Hkv, Dh), jnp.float32)
+    r = {"Smax": Smax, "B": B}
+    # full-window jnp read (what the engine's einsum core pays regardless of
+    # actual sequence length) vs the ragged kernel at short/long positions
+    from repro.kernels import ref
+    full = jax.jit(ref.ref_decode_attention)
+    us = timeit(lambda: full(q, kc, vc,
+                             jnp.full((B,), Smax - 1)).block_until_ready())
+    r["jnp_full_us"] = us
+    rows.add(f"decode/read_jnp_full_S{Smax}", us, "window=Smax")
+    for tag, pos in [("short", jnp.full((B,), block_k - 1, jnp.int32)),
+                     ("long", jnp.full((B,), Smax - 1, jnp.int32))]:
+        us = timeit(lambda: ops.decode_attention(
+            q, kc, vc, pos, block_k=block_k,
+            interpret=interpret).block_until_ready())
+        r[f"flash_{tag}_us"] = us
+        rows.add(f"decode/read_flash_{tag}_S{Smax}", us,
+                 f"pos={int(pos[0])}")
+    out["read"].append(r)
+
+
+def run(smoke: bool = False, out_path: str = "BENCH_decode.json") -> Rows:
+    rows = Rows()
+    out = {"write": [], "read": [], "smoke": smoke}
+    if smoke:
+        write_shapes = [(2, 2, 32, 64, 8), (2, 2, 32, 128, 8)]
+        read_shapes = [(2, 4, 2, 32, 64, 32)]
+    else:
+        write_shapes = [(8, 8, 128, s, 16) for s in (512, 1024, 2048)]
+        read_shapes = [(4, 8, 2, 64, s, 128) for s in (512, 1024)]
+    for B, Hkv, Dh, Smax, ps in write_shapes:
+        bench_writes(rows, out, B, Hkv, Dh, Smax, ps)
+    for B, H, Hkv, Dh, Smax, bk in read_shapes:
+        bench_reads(rows, out, B, H, Hkv, Dh, Smax, bk,
+                    interpret=jax.default_backend() != "tpu")
+    # headline: write bytes growth from smallest to largest Smax
+    w = out["write"]
+    if len(w) >= 2:
+        out["scaling"] = {
+            k: w[-1][f"{k}_bytes"] / max(w[0][f"{k}_bytes"], 1.0)
+            for k in ("scatter", "dus", "paged")}
+        rows.add("decode/write_bytes_growth",
+                 0.0, ";".join(f"{k}={v:.2f}x"
+                               for k, v in out["scaling"].items()))
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    smoke = "--smoke" in sys.argv
+    path = "BENCH_decode.json"
+    if "--out" in sys.argv:
+        path = sys.argv[sys.argv.index("--out") + 1]
+    run(smoke=smoke, out_path=path).emit()

@@ -27,13 +27,40 @@ def _bytes_per(dtype_bits=16):
     return dtype_bits / 8
 
 
-def attn_costs(cfg: ModelConfig, B, Sq, Skv, kind="global", decode=False):
-    """QKV/O projections + attention core for one layer."""
+def kv_token_bytes(cfg: ModelConfig, dtype_bytes: float = None) -> float:
+    """KV-cache bytes one token occupies in ONE attention layer (the single
+    source of truth shared with serving.kv_cache's capacity accounting):
+    MLA caches the compressed latent (R + rope), GQA caches k + v heads."""
+    bp = _bytes_per() if dtype_bytes is None else dtype_bytes
+    if cfg.attn_type == "mla":
+        return (cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim) * bp
+    return 2 * cfg.num_kv_heads * cfg.head_dim * bp
+
+
+def _kv_write_cost(cfg: ModelConfig, B, Skv, kind, kv_write, bp) -> OpCost:
+    """Decode-step KV-cache *write* traffic for one layer. ``"scatter"`` is
+    the whole-row mask-scatter (reads + rewrites the full [Smax] window
+    every token); ``"dus"``/``"paged"`` write one token (dynamic-update
+    -slice / one page-table entry per row)."""
+    tok = kv_token_bytes(cfg, bp)
+    if kv_write == "scatter":
+        nbytes = 2.0 * B * Skv * tok          # read-modify-write, full window
+    else:                                     # "dus" | "paged"
+        nbytes = float(B) * tok
+    return OpCost(f"kv_write_{kind}", 0.0, nbytes)
+
+
+def attn_costs(cfg: ModelConfig, B, Sq, Skv, kind="global", decode=False,
+               kv_write=None):
+    """QKV/O projections + attention core for one layer. In decode mode
+    ``kv_write`` adds the cache-write traffic term (see _kv_write_cost)."""
     D, H, Dh = cfg.d_model, cfg.num_heads, cfg.head_dim
     Hkv = cfg.num_kv_heads
     bp = _bytes_per()
     T = B * Sq
     ops = []
+    if decode and kv_write:
+        ops.append(_kv_write_cost(cfg, B, Skv, kind, kv_write, bp))
     if cfg.attn_type == "mla":
         m = cfg.mla
         qk = m.qk_nope_head_dim + m.qk_rope_head_dim
@@ -119,11 +146,12 @@ def ssm_costs(cfg: ModelConfig, B, S, kind):
 
 
 def layer_costs(cfg: ModelConfig, B, Sq, Skv, kind, moe_layer: bool,
-                d_ff=None) -> List[OpCost]:
+                d_ff=None, decode=False, kv_write=None) -> List[OpCost]:
     base = kind.replace("_shared", "")
     ops: List[OpCost] = []
     if base in ("global", "local"):
-        ops += attn_costs(cfg, B, Sq, Skv, base)
+        ops += attn_costs(cfg, B, Sq, Skv, base, decode=decode,
+                          kv_write=kv_write)
         ops += (moe_costs(cfg, B, Sq) if moe_layer
                 else mlp_costs(cfg, B, Sq, d_ff))
     elif base == "cross":
@@ -147,11 +175,16 @@ def layer_costs(cfg: ModelConfig, B, Sq, Skv, kind, moe_layer: bool,
     return ops
 
 
-def model_costs(cfg: ModelConfig, B: int, S: int, mode: str) -> List[OpCost]:
+def model_costs(cfg: ModelConfig, B: int, S: int, mode: str,
+                kv_write=None) -> List[OpCost]:
     """mode: train | prefill | decode. decode: Sq=1, Skv=S. train adds
     backward (2x fwd flops for grads) via the TRAIN_MULT on the caller side —
-    here we return FORWARD costs; see step_costs()."""
+    here we return FORWARD costs; see step_costs(). ``kv_write`` (decode
+    only): "scatter" models the whole-row mask-scatter cache write,
+    "dus"/"paged" the one-token fast paths; None (default) omits the term
+    (the historical behaviour)."""
     Sq, Skv = (1, S) if mode == "decode" else (S, S)
+    decode = mode == "decode"
     ops: List[OpCost] = []
     bp = _bytes_per()
     pattern = cfg.pattern
@@ -161,7 +194,7 @@ def model_costs(cfg: ModelConfig, B: int, S: int, mode: str) -> List[OpCost]:
         moe_layer = bool(cfg.moe) and i >= n_prefix
         ops += layer_costs(cfg, B, Sq, Skv, kind,
                            moe_layer, None if moe_layer or i >= n_prefix
-                           else dense_ff)
+                           else dense_ff, decode=decode, kv_write=kv_write)
     if cfg.encoder and mode != "decode":
         ecfg = cfg
         F = cfg.encoder.num_frames

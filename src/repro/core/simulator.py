@@ -49,8 +49,9 @@ class Kernel:
 
 
 def request_kernels(cfg: ModelConfig, B: int, S: int, mode: str,
-                    dev: DeviceSpec, max_kernels: int = 24) -> List[Kernel]:
-    ops = model_costs(cfg, B, S, mode)
+                    dev: DeviceSpec, max_kernels: int = 24,
+                    kv_write=None) -> List[Kernel]:
+    ops = model_costs(cfg, B, S, mode, kv_write=kv_write)
     per = max(1, len(ops) // max_kernels)
     out: List[Kernel] = []
     for i in range(0, len(ops), per):

@@ -1,10 +1,15 @@
 # Pallas TPU kernels for the perf-critical compute layers (validated against
 # the pure-jnp oracles in ref.py via interpret mode on CPU):
-#   flash_attention     — tiled GQA attention (prefill; softcap/local window)
-#   decode_attention    — flash-decode against the KV cache
-#   spt_gather/scatter  — shadow-page-table indirection (the paper's Fig. 10)
-#   dual_tenant_matmul  — grid-partitioned LS/BE co-execution (elastic SM)
-#   ssd_scan            — chunked linear recurrence (mamba2/rwkv backbones)
+#   flash_attention        — tiled GQA attention (prefill; softcap/local window)
+#   decode_attention       — ragged flash-decode against the KV cache
+#                            (per-row positions, early exit past each row's
+#                            valid length)
+#   decode_attention_paged — flash-decode addressing a shared KV page pool
+#                            through per-row page tables (serving layout)
+#   spt_gather/scatter     — shadow-page-table indirection (the paper's Fig. 10)
+#   dual_tenant_matmul     — grid-partitioned LS/BE co-execution (elastic SM)
+#   ssd_scan               — chunked linear recurrence (mamba2/rwkv backbones)
 from . import ops, ref
-from .ops import (decode_attention, dual_tenant_matmul, flash_attention,
-                  spt_gather, spt_scatter, ssd_scan)
+from .ops import (decode_attention, decode_attention_paged,
+                  dual_tenant_matmul, flash_attention, spt_gather,
+                  spt_scatter, ssd_scan)

@@ -1,8 +1,22 @@
-"""Flash-decode (TPU Pallas): one-new-token GQA attention against a KV cache,
-with valid-length masking from a scalar-prefetched position.
+"""Flash-decode (TPU Pallas): one-new-token GQA attention against a KV cache.
 
-Grid: (batch, kv_heads, num_kv_blocks); the kv axis is sequential and carries
-(m, l, acc) scratch sized [group, D] — all query heads of one KV head are
+Two entry points share one online-softmax kernel body:
+
+``decode_attention``       dense cache [B,Smax,Hkv,D] (or KV-major
+                           [B,Hkv,Smax,D] via ``kv_layout="bhsd"``), with
+                           *ragged* per-row valid lengths: ``pos`` may be a
+                           scalar or a [B] vector (continuous batching).
+``decode_attention_paged`` page-pool cache [n_pages,Hkv,page,D] addressed
+                           through a per-row page table — the serving
+                           engine's PagedKVCache layout; no dense gather is
+                           materialized.
+
+Ragged early-exit: the kv grid axis is sequential and its BlockSpec index
+map pins every block past a row's last valid block to that last block
+(Pallas elides the copy when consecutive steps request the same block), and
+``pl.when`` skips the compute — so per-row cost scales with the row's actual
+sequence length, not ``Smax``. Grid: (batch, kv_heads, num_kv_blocks) with
+(m, l, acc) scratch sized [group, D]; all query heads of one KV head are
 processed together (the MXU-friendly GQA decode layout).
 """
 from __future__ import annotations
@@ -21,6 +35,7 @@ NEG_INF = -1e30
 
 def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
             scale, block_k):
+    b = pl.program_id(0)
     ki = pl.program_id(2)
 
     @pl.when(ki == 0)
@@ -29,21 +44,26 @@ def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    q = q_ref[0, 0].astype(jnp.float32) * scale          # [G, D]
-    k = k_ref[0, 0].astype(jnp.float32)                  # [bk, D]
-    v = v_ref[0, 0].astype(jnp.float32)
-    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # [G, bk]
-    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    s = jnp.where(k_pos <= pos_ref[0], s, NEG_INF)
+    # per-row early exit: blocks past this row's position carry no valid
+    # keys — their BlockSpec index is pinned (no new HBM traffic) and the
+    # compute is predicated off entirely
+    @pl.when(ki <= pos_ref[b] // block_k)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # [G, D]
+        k = k_ref[0, 0].astype(jnp.float32)                  # [bk, D]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # [G, bk]
+        k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos <= pos_ref[b], s, NEG_INF)
 
-    m_prev = m_scr[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-    p = jnp.exp(s - m_new)
-    alpha = jnp.exp(m_prev - m_new)
-    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
-    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
-        p, v, preferred_element_type=jnp.float32)
-    m_scr[...] = m_new
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
 
     @pl.when(ki == pl.num_programs(2) - 1)
     def _fin():
@@ -51,19 +71,60 @@ def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
 
 
+def _paged_kernel(pt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                  acc_scr, *, scale, block_k):
+    # the page table is consumed by the BlockSpec index maps only
+    del pt_ref
+    _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            scale=scale, block_k=block_k)
+
+
+def _pos_vector(pos, B):
+    return jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+
+
 def decode_attention(q, k_cache, v_cache, pos, *, block_k=128,
-                     interpret=False):
-    """q: [B,H,D] (one new token); caches: [B,Smax,Hkv,D]; pos: scalar int32.
-    Returns [B,H,D]."""
+                     interpret=False, kv_layout="bshd"):
+    """q: [B,H,D] (one new token); caches: [B,Smax,Hkv,D] (``kv_layout=
+    "bshd"``, the default) or KV-major [B,Hkv,Smax,D] (``"bhsd"``, the
+    serving cache layout — saves the transpose); pos: scalar int32 or [B]
+    per-row positions. Returns [B,H,D]."""
     B, H, D = q.shape
-    Smax, Hkv = k_cache.shape[1], k_cache.shape[2]
+    if kv_layout == "bshd":
+        kt = k_cache.transpose(0, 2, 1, 3)                   # [B,Hkv,S,D]
+        vt = v_cache.transpose(0, 2, 1, 3)
+    elif kv_layout == "bhsd":
+        kt, vt = k_cache, v_cache
+    else:
+        raise ValueError(f"unknown kv_layout {kv_layout!r}")
+    Smax, Hkv = kt.shape[2], kt.shape[1]
     G = H // Hkv
     block_k = min(block_k, Smax)
-    assert Smax % block_k == 0
+    if Smax % block_k:
+        # non-aligned window: prefer the largest decent divisor (zero-copy
+        # lowering); only pathological (e.g. prime) windows pad the caches
+        # to a block multiple — a per-call copy, so callers wanting the
+        # fast path should align Smax. Padded keys sit past every valid
+        # position: the mask kills them and the early-exit index map never
+        # fetches them.
+        d = block_k
+        while Smax % d:
+            d -= 1
+        if d >= 32:
+            block_k = d
+        else:
+            pad = block_k - Smax % block_k
+            kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            Smax += pad
     qg = q.reshape(B, Hkv, G, D)
-    kt = k_cache.transpose(0, 2, 1, 3)                   # [B,Hkv,S,D]
-    vt = v_cache.transpose(0, 2, 1, 3)
-    pos_arr = jnp.asarray(pos, jnp.int32).reshape((1,))
+    pos_arr = _pos_vector(pos, B)
+
+    def _kv_index(b, h, j, pos):
+        # pin out-of-range blocks to the row's last valid block: Pallas
+        # skips the DMA when the block index repeats between steps
+        return (b, h, jnp.minimum(j, pos[b] // block_k), 0)
+
     out = pl.pallas_call(
         functools.partial(_kernel, scale=D ** -0.5, block_k=block_k),
         out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
@@ -72,10 +133,8 @@ def decode_attention(q, k_cache, v_cache, pos, *, block_k=128,
             grid=(B, Hkv, Smax // block_k),
             in_specs=[
                 pl.BlockSpec((1, 1, G, D), lambda b, h, j, pos: (b, h, 0, 0)),
-                pl.BlockSpec((1, 1, block_k, D),
-                             lambda b, h, j, pos: (b, h, j, 0)),
-                pl.BlockSpec((1, 1, block_k, D),
-                             lambda b, h, j, pos: (b, h, j, 0)),
+                pl.BlockSpec((1, 1, block_k, D), _kv_index),
+                pl.BlockSpec((1, 1, block_k, D), _kv_index),
             ],
             out_specs=pl.BlockSpec((1, 1, G, D),
                                    lambda b, h, j, pos: (b, h, 0, 0)),
@@ -88,4 +147,53 @@ def decode_attention(q, k_cache, v_cache, pos, *, block_k=128,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(pos_arr, qg, kt, vt)
+    return out.reshape(B, H, D)
+
+
+def decode_attention_paged(q, k_pages, v_pages, page_table, pos, *,
+                           interpret=False):
+    """Paged flash-decode: the KV lives in a shared page pool and each row's
+    blocks are gathered through its page table *inside the BlockSpec index
+    map* (one page = one kv block; no [B,Smax] dense view is materialized).
+
+    q: [B,H,D]; {k,v}_pages: [n_pages,Hkv,page_size,D]; page_table: [B,P]
+    int32 (entries >= n_pages are unmapped — they are never touched because
+    the kv index map clamps to the row's last valid page); pos: [B] int32.
+    The visible window is P * page_size tokens. Returns [B,H,D].
+    """
+    B, H, D = q.shape
+    n_pages, Hkv, page_size, _ = k_pages.shape
+    P = page_table.shape[1]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+    pos_arr = _pos_vector(pos, B)
+    pt = jnp.asarray(page_table, jnp.int32)
+
+    def _kv_index(b, h, j, pt, pos):
+        jj = jnp.minimum(j, pos[b] // page_size)
+        return (jnp.minimum(pt[b, jj], n_pages - 1), h, 0, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, scale=D ** -0.5, block_k=page_size),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, Hkv, P),
+            in_specs=[
+                pl.BlockSpec((1, 1, G, D),
+                             lambda b, h, j, pt, pos: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, page_size, D), _kv_index),
+                pl.BlockSpec((1, 1, page_size, D), _kv_index),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, D),
+                                   lambda b, h, j, pt, pos: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, D), jnp.float32),
+            ]),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(pt, pos_arr, qg, k_pages, v_pages)
     return out.reshape(B, H, D)

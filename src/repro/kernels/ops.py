@@ -8,7 +8,8 @@ import functools
 import jax
 
 from .flash_attention import flash_attention as _flash
-from .decode_attention import decode_attention as _decode
+from .decode_attention import (decode_attention as _decode,
+                               decode_attention_paged as _decode_paged)
 from .spt_gather import spt_gather as _gather, spt_scatter as _scatter
 from .dual_tenant_matmul import dual_tenant_matmul as _dtm
 from .ssd_scan import ssd_scan as _ssd
@@ -28,12 +29,21 @@ def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
                   block_q=block_q, block_k=block_k, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret",
+                                             "kv_layout"))
 def decode_attention(q, k_cache, v_cache, pos, *, block_k=128,
-                     interpret=None):
+                     interpret=None, kv_layout="bshd"):
     interpret = _interpret_default() if interpret is None else interpret
     return _decode(q, k_cache, v_cache, pos, block_k=block_k,
-                   interpret=interpret)
+                   interpret=interpret, kv_layout=kv_layout)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attention_paged(q, k_pages, v_pages, page_table, pos, *,
+                           interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _decode_paged(q, k_pages, v_pages, page_table, pos,
+                         interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -31,17 +31,31 @@ def ref_attention(q, k, v, *, causal=True, window=None, softcap=None):
 
 
 def ref_decode_attention(q, k_cache, v_cache, pos):
-    """q: [B,H,D]; caches: [B,Smax,Hkv,D]; pos scalar."""
+    """q: [B,H,D]; caches: [B,Smax,Hkv,D]; pos scalar or [B] per-row."""
     B, H, D = q.shape
     Smax, Hkv = k_cache.shape[1], k_cache.shape[2]
     G = H // Hkv
     kr = jnp.repeat(k_cache, G, axis=2).astype(jnp.float32)
     vr = jnp.repeat(v_cache, G, axis=2).astype(jnp.float32)
     s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32), kr) * D ** -0.5
-    valid = jnp.arange(Smax)[None, None, :] <= pos
+    pos_b = jnp.broadcast_to(jnp.asarray(pos), (B,))
+    valid = jnp.arange(Smax)[None, None, :] <= pos_b[:, None, None]
     s = jnp.where(valid, s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhk,bkhd->bhd", w, vr).astype(q.dtype)
+
+
+def ref_decode_attention_paged(q, k_pages, v_pages, page_table, pos):
+    """Paged oracle: gather each row's pages into a dense [B,S,Hkv,D] view
+    and defer to ``ref_decode_attention``."""
+    n_pages, Hkv, ps, D = k_pages.shape
+    B, P = page_table.shape
+    pt = jnp.clip(page_table, 0, n_pages - 1)
+    kd = jnp.take(k_pages, pt, axis=0)            # [B,P,Hkv,ps,D]
+    vd = jnp.take(v_pages, pt, axis=0)
+    kd = kd.transpose(0, 1, 3, 2, 4).reshape(B, P * ps, Hkv, D)
+    vd = vd.transpose(0, 1, 3, 2, 4).reshape(B, P * ps, Hkv, D)
+    return ref_decode_attention(q, kd, vd, pos)
 
 
 def ref_spt_gather(arena, spt):

@@ -6,10 +6,11 @@
 Runs reduced-config models for real through the continuous-batching
 ServingEngine (slot-pool batched prefill/decode; LS preempts BE at step
 boundaries, or lends BE the plan's sm_be quantum share when --grid-search
-derives a ResourcePlan; colored KV arenas when --coloring). With
---backend sim the same request stream drives the contention simulator
-instead (pod-scale what-if on the full configs; see also
-benchmarks/fig12_invram.py).
+derives a ResourcePlan; colored KV arenas when --coloring; page-table KV
+admission with --paged, optionally through the ragged Pallas flash-decode
+kernel with --use-flash). With --backend sim the same request stream drives
+the contention simulator instead (pod-scale what-if on the full configs;
+see also benchmarks/fig12_invram.py).
 """
 import argparse
 
@@ -27,6 +28,12 @@ def main():
     ap.add_argument("--backend", default="jax", choices=["jax", "sim"])
     ap.add_argument("--slots", type=int, default=4,
                     help="decode slots per tenant (continuous batching)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache with page-table admission")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="tokens per KV page (with --paged)")
+    ap.add_argument("--use-flash", action="store_true",
+                    help="ragged Pallas flash-decode (interpret off-TPU)")
     ap.add_argument("--grid-search", action="store_true",
                     help="derive a ResourcePlan offline and thread it in")
     ap.add_argument("--gpu", default="tesla-p40",
@@ -54,6 +61,7 @@ def main():
     eng = ServingEngine(
         max_seq=args.prompt_len + args.max_new + 4,
         backend=args.backend, plan=plan, coloring=args.coloring,
+        paged=args.paged, page_size=args.page_size, use_flash=args.use_flash,
         slots_ls=args.slots, slots_be=args.slots, device=args.gpu
         if args.gpu in GPU_DEVICES else "tpu-v5e",
         hash_model=gpu_hash_model(args.gpu)

@@ -175,32 +175,27 @@ def gqa_forward(p, x, cfg, *, layer_kind="global", positions=None, causal=True):
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
 
 
-def gqa_decode(p, x, cfg, cache_k, cache_v, pos, *, layer_kind="global"):
-    """One-token decode. x: [B,1,D]; cache_{k,v}: [B,Hkv,Smax,Dh] (KV-major:
-    attention-einsum-native layout, no per-step transposes; sequence axis is
-    the sharding axis); pos: scalar, or [B] per-row positions (continuous
-    batching: each slot of a decode batch sits at its own sequence offset).
-
-    Returns (out [B,1,D], new_cache_k, new_cache_v).
-    """
-    B = x.shape[0]
-    Hkv, Smax = cache_k.shape[1], cache_k.shape[2]
-    H = cfg.num_heads
+def _decode_core(q, cache_k, cache_v, positions, cfg, layer_kind, x_dtype,
+                 *, use_flash=False):
+    """Shared decode attention core over a dense KV window. q: [B,1,H,Dh];
+    cache_{k,v}: [B,Hkv,S,Dh] (KV-major); positions: [B,1]. When
+    ``use_flash`` is set (and the layer has no softcap/local window, which
+    the Pallas kernel doesn't implement) the ragged flash-decode kernel
+    replaces the jnp einsum core — same contract, per-row early exit."""
+    B, _, H, Dh = q.shape
+    Hkv, S = cache_k.shape[1], cache_k.shape[2]
     G = H // Hkv
-    Dh = cfg.head_dim
-    positions = jnp.broadcast_to(jnp.asarray(pos), (B,))[:, None]
-    q, k, v = _proj_qkv(p, x, cfg, positions)       # k,v: [B,1,Hkv,Dh]
-    # per-row scatter at each row's position (mask write: supports a vector
-    # pos; rows whose position is out of range simply write nothing)
-    upd = (jnp.arange(Smax)[None, :] == positions)[:, None, :, None]
-    cache_k = jnp.where(upd, k.transpose(0, 2, 1, 3).astype(cache_k.dtype),
-                        cache_k)
-    cache_v = jnp.where(upd, v.transpose(0, 2, 1, 3).astype(cache_v.dtype),
-                        cache_v)
-    kv_pos = jnp.arange(Smax)[None, :]
-    valid = kv_pos <= positions                     # [B, Smax]
-    if layer_kind == "local" and cfg.local_window:
-        valid &= kv_pos > positions - cfg.local_window
+    window = cfg.local_window if layer_kind == "local" else None
+    if use_flash and not cfg.attn_logit_softcap and not window:
+        from ..kernels import ops as kops    # lazy: keep pallas off cold paths
+        out = kops.decode_attention(q[:, 0], cache_k, cache_v,
+                                    positions[:, 0].astype(jnp.int32),
+                                    kv_layout="bhsd")
+        return out[:, None].astype(x_dtype)
+    kv_pos = jnp.arange(S)[None, :]
+    valid = kv_pos <= positions                     # [B, S]
+    if window:
+        valid &= kv_pos > positions - window
     qg = q.reshape(B, 1, Hkv, G, Dh)
     scores = jnp.einsum("bqhgd,bhkd->bhgqk", qg, cache_k,
                         preferred_element_type=jnp.float32) * (Dh ** -0.5)
@@ -210,8 +205,101 @@ def gqa_decode(p, x, cfg, cache_k, cache_v, pos, *, layer_kind="global"):
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgqk,bhkd->bqhgd", w.astype(cache_v.dtype), cache_v,
                      preferred_element_type=jnp.float32)
-    out = out.reshape(B, 1, H, Dh).astype(x.dtype)
+    return out.reshape(B, 1, H, Dh).astype(x_dtype)
+
+
+def gqa_decode(p, x, cfg, cache_k, cache_v, pos, *, layer_kind="global",
+               use_flash=False):
+    """One-token decode. x: [B,1,D]; cache_{k,v}: [B,Hkv,Smax,Dh] (KV-major:
+    attention-einsum-native layout, no per-step transposes; sequence axis is
+    the sharding axis); pos: scalar, or [B] per-row positions (continuous
+    batching: each slot of a decode batch sits at its own sequence offset).
+
+    Cache write: a scalar ``pos`` takes the ``dynamic_update_slice`` fast
+    path (one-token traffic), a vector ``pos`` the ragged mask-scatter
+    fallback; either way positions out of range simply write nothing, and
+    the two paths produce bit-identical caches (tested).
+    Returns (out [B,1,D], new_cache_k, new_cache_v).
+    """
+    B = x.shape[0]
+    Smax = cache_k.shape[2]
+    positions = jnp.broadcast_to(jnp.asarray(pos), (B,))[:, None]
+    q, k, v = _proj_qkv(p, x, cfg, positions)       # k,v: [B,1,Hkv,Dh]
+    kt = k.transpose(0, 2, 1, 3).astype(cache_k.dtype)   # [B,Hkv,1,Dh]
+    vt = v.transpose(0, 2, 1, 3).astype(cache_v.dtype)
+    if jnp.ndim(pos) == 0:
+        p0 = jnp.asarray(pos, jnp.int32)
+        # guard out-of-range like the mask-scatter (write nothing) instead
+        # of letting dynamic_update_slice clamp onto the last entry
+        cache_k, cache_v = jax.lax.cond(
+            p0 < Smax,
+            lambda ck, cv: (jax.lax.dynamic_update_slice(ck, kt,
+                                                         (0, 0, p0, 0)),
+                            jax.lax.dynamic_update_slice(cv, vt,
+                                                         (0, 0, p0, 0))),
+            lambda ck, cv: (ck, cv), cache_k, cache_v)
+    else:
+        upd = (jnp.arange(Smax)[None, :] == positions)[:, None, :, None]
+        cache_k = jnp.where(upd, kt, cache_k)
+        cache_v = jnp.where(upd, vt, cache_v)
+    out = _decode_core(q, cache_k, cache_v, positions, cfg, layer_kind,
+                       x.dtype, use_flash=use_flash)
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache_k, cache_v
+
+
+def _page_lookup(page_table, positions, ps, n_pages):
+    """(physical page, in-page offset) per row for an append at
+    ``positions``; unmapped entries land on the ``n_pages`` sentinel so a
+    ``mode="drop"`` scatter writes nothing."""
+    logical = positions[:, 0] // ps
+    off = positions[:, 0] % ps
+    phys = jnp.take_along_axis(page_table, logical[:, None], axis=1)[:, 0]
+    return jnp.where(phys < 0, n_pages, phys), off
+
+
+def gqa_decode_paged(p, x, cfg, k_pages, v_pages, page_table, pos, *,
+                     layer_kind="global", use_flash=False):
+    """One-token decode against a paged KV cache (serving fast path).
+
+    k_pages/v_pages: [n_pages, Hkv, page_size, Dh] — a page pool shared by
+    every slot of the tenant (carved from the ColoredArena by
+    ``serving.kv_cache.PagedKVCache``); page_table: [B, P] int32 mapping
+    each row's logical pages to pool pages (entries >= n_pages are
+    unmapped); pos: scalar or [B].
+
+    The append touches exactly one page per row (an O(tokens) scatter — no
+    full-cache rewrite), and unmapped rows drop their writes. The read
+    side: ``use_flash`` gathers pages inside the kernel's BlockSpec index
+    map (no dense copy, per-row early exit — the real-hardware path); the
+    jnp fallback materializes a dense [B, P*page_size] window view first,
+    so it pays an extra window copy per layer and is a correctness path,
+    not a traffic win. Returns (out [B,1,D], new_k_pages, new_v_pages).
+    """
+    B = x.shape[0]
+    n_pages, Hkv, ps, Dh = k_pages.shape
+    P = page_table.shape[1]
+    positions = jnp.broadcast_to(jnp.asarray(pos), (B,))[:, None]
+    q, k, v = _proj_qkv(p, x, cfg, positions)       # k,v: [B,1,Hkv,Dh]
+    phys, off = _page_lookup(page_table, positions, ps, n_pages)
+    k_pages = k_pages.at[phys, :, off, :].set(
+        k[:, 0].astype(k_pages.dtype), mode="drop")
+    v_pages = v_pages.at[phys, :, off, :].set(
+        v[:, 0].astype(v_pages.dtype), mode="drop")
+    if use_flash and not cfg.attn_logit_softcap and \
+            not (layer_kind == "local" and cfg.local_window):
+        from ..kernels import ops as kops
+        out = kops.decode_attention_paged(
+            q[:, 0], k_pages, v_pages, page_table,
+            positions[:, 0].astype(jnp.int32))
+        out = out[:, None].astype(x.dtype)
+    else:
+        pt = jnp.clip(page_table, 0, n_pages - 1)
+        kd = jnp.take(k_pages, pt, axis=0)          # [B,P,Hkv,ps,Dh]
+        vd = jnp.take(v_pages, pt, axis=0)
+        kd = kd.transpose(0, 2, 1, 3, 4).reshape(B, Hkv, P * ps, Dh)
+        vd = vd.transpose(0, 2, 1, 3, 4).reshape(B, Hkv, P * ps, Dh)
+        out = _decode_core(q, kd, vd, positions, cfg, layer_kind, x.dtype)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), k_pages, v_pages
 
 
 # ---------------------------------------------------------------------------
@@ -267,25 +355,11 @@ def mla_forward(p, x, cfg, *, positions=None, causal=True, **_):
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
 
 
-def mla_decode(p, x, cfg, cache_ckv, cache_krope, pos, **_):
-    """Absorbed-matmul MLA decode against the compressed latent cache.
-
-    cache_ckv: [B,Smax,R]; cache_krope: [B,Smax,rope].
-    Scores are computed in latent space: q_eff = q_nope @ wk_b (absorbed), and
-    the attention output is re-expanded through wv_b afterwards — the cache
-    stays at R + rope floats per token (the paper-relevant serving win).
-    pos: scalar, or [B] per-row positions (continuous batching).
-    """
+def _mla_core(p, x, cfg, q_nope, q_rope, cache_ckv, cache_krope, positions):
+    """Absorbed-matmul attention over a dense latent window. cache_ckv:
+    [B,S,R]; cache_krope: [B,S,rope]; positions: [B,1]."""
     m = cfg.mla
-    B = x.shape[0]
     Smax = cache_ckv.shape[1]
-    positions = jnp.broadcast_to(jnp.asarray(pos), (B,))[:, None]
-    q_nope, q_rope = _mla_q(p, x, cfg, positions)
-    c_kv, k_rope = _mla_latent(p, x, cfg, positions)
-    upd = (jnp.arange(Smax)[None, :] == positions)[:, :, None]   # [B,Smax,1]
-    cache_ckv = jnp.where(upd, c_kv.astype(cache_ckv.dtype), cache_ckv)
-    cache_krope = jnp.where(upd, k_rope.astype(cache_krope.dtype), cache_krope)
-    # absorb: q_eff[b,1,h,R]
     q_eff = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["wk_b"])
     scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
     scores = (jnp.einsum("bqhr,bsr->bhqs", q_eff, cache_ckv,
@@ -298,7 +372,69 @@ def mla_decode(p, x, cfg, cache_ckv, cache_krope, pos, **_):
     o_latent = jnp.einsum("bhqs,bsr->bqhr", w.astype(cache_ckv.dtype),
                           cache_ckv, preferred_element_type=jnp.float32)
     out = jnp.einsum("bqhr,rhn->bqhn", o_latent.astype(x.dtype), p["wv_b"])
-    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache_ckv, cache_krope
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def mla_decode(p, x, cfg, cache_ckv, cache_krope, pos, **_):
+    """Absorbed-matmul MLA decode against the compressed latent cache.
+
+    cache_ckv: [B,Smax,R]; cache_krope: [B,Smax,rope].
+    Scores are computed in latent space: q_eff = q_nope @ wk_b (absorbed), and
+    the attention output is re-expanded through wv_b afterwards — the cache
+    stays at R + rope floats per token (the paper-relevant serving win).
+    pos: scalar (``dynamic_update_slice`` one-token write), or [B] per-row
+    positions (ragged mask-scatter fallback; continuous batching). Both
+    write paths are bit-identical, dropping out-of-range writes.
+    """
+    B = x.shape[0]
+    Smax = cache_ckv.shape[1]
+    positions = jnp.broadcast_to(jnp.asarray(pos), (B,))[:, None]
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    c_kv, k_rope = _mla_latent(p, x, cfg, positions)
+    if jnp.ndim(pos) == 0:
+        p0 = jnp.asarray(pos, jnp.int32)
+        cache_ckv, cache_krope = jax.lax.cond(
+            p0 < Smax,
+            lambda c, r: (jax.lax.dynamic_update_slice(
+                              c, c_kv.astype(c.dtype), (0, p0, 0)),
+                          jax.lax.dynamic_update_slice(
+                              r, k_rope.astype(r.dtype), (0, p0, 0))),
+            lambda c, r: (c, r), cache_ckv, cache_krope)
+    else:
+        upd = (jnp.arange(Smax)[None, :] == positions)[:, :, None]  # [B,S,1]
+        cache_ckv = jnp.where(upd, c_kv.astype(cache_ckv.dtype), cache_ckv)
+        cache_krope = jnp.where(upd, k_rope.astype(cache_krope.dtype),
+                                cache_krope)
+    return (_mla_core(p, x, cfg, q_nope, q_rope, cache_ckv, cache_krope,
+                      positions),
+            cache_ckv, cache_krope)
+
+
+def mla_decode_paged(p, x, cfg, ckv_pages, krope_pages, page_table, pos, **_):
+    """Paged MLA decode: the latent cache lives in a shared page pool.
+
+    ckv_pages: [n_pages, page_size, R]; krope_pages: [n_pages, page_size,
+    rope]; page_table: [B, P] int32 (entries >= n_pages unmapped). The
+    append writes one (page, offset) latent row per batch row; attention
+    runs over the per-row gathered window of P * page_size tokens.
+    """
+    B = x.shape[0]
+    n_pages, ps, R = ckv_pages.shape
+    P = page_table.shape[1]
+    positions = jnp.broadcast_to(jnp.asarray(pos), (B,))[:, None]
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    c_kv, k_rope = _mla_latent(p, x, cfg, positions)
+    phys, off = _page_lookup(page_table, positions, ps, n_pages)
+    ckv_pages = ckv_pages.at[phys, off, :].set(
+        c_kv[:, 0].astype(ckv_pages.dtype), mode="drop")
+    krope_pages = krope_pages.at[phys, off, :].set(
+        k_rope[:, 0].astype(krope_pages.dtype), mode="drop")
+    pt = jnp.clip(page_table, 0, n_pages - 1)
+    ckv = jnp.take(ckv_pages, pt, axis=0).reshape(B, P * ps, R)
+    krope = jnp.take(krope_pages, pt, axis=0).reshape(
+        B, P * ps, krope_pages.shape[-1])
+    return (_mla_core(p, x, cfg, q_nope, q_rope, ckv, krope, positions),
+            ckv_pages, krope_pages)
 
 
 # ---------------------------------------------------------------------------

@@ -7,6 +7,7 @@ Entry points:
     forward(params, cfg, batch)            -> (logits, aux)
     loss_fn(params, cfg, batch)            -> (loss, metrics)
     init_cache(cfg, B, max_seq)            -> cache pytree
+    init_paged_cache(cfg, n_pages, page)   -> page-pool cache pytree
     decode_step(params, cfg, token, cache, pos, ctx) -> (logits, cache)
     prefill(params, cfg, batch, max_seq)   -> (logits_last, cache)
 
@@ -191,6 +192,20 @@ def _attn_layer(p, x, cfg, kind, ctx, aux, cache=None, pos=None):
             a = attn.gqa_forward(p["attn"], h, cfg, layer_kind=kind,
                                  positions=ctx.get("positions"),
                                  causal=ctx.get("causal", True))
+    elif "page_table" in ctx:
+        # paged decode: cache leaves are shared page pools, addressed
+        # through the per-row page table (serving engine fast path)
+        pt = ctx["page_table"]
+        if cfg.attn_type == "mla":
+            a, ckv, kr = attn.mla_decode_paged(p["attn"], h, cfg,
+                                               cache["ckv"], cache["krope"],
+                                               pt, pos)
+            new_cache = {"ckv": ckv, "krope": kr}
+        else:
+            a, ck, cv = attn.gqa_decode_paged(
+                p["attn"], h, cfg, cache["k"], cache["v"], pt, pos,
+                layer_kind=kind, use_flash=ctx.get("use_flash", False))
+            new_cache = {"k": ck, "v": cv}
     else:
         if cfg.attn_type == "mla":
             a, ckv, kr = attn.mla_decode(p["attn"], h, cfg, cache["ckv"],
@@ -198,7 +213,8 @@ def _attn_layer(p, x, cfg, kind, ctx, aux, cache=None, pos=None):
             new_cache = {"ckv": ckv, "krope": kr}
         else:
             a, ck, cv = attn.gqa_decode(p["attn"], h, cfg, cache["k"],
-                                        cache["v"], pos, layer_kind=kind)
+                                        cache["v"], pos, layer_kind=kind,
+                                        use_flash=ctx.get("use_flash", False))
             new_cache = {"k": ck, "v": cv}
     x = x + _maybe_post(a, p, "ln1_post", cfg)
     h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
@@ -497,14 +513,42 @@ def init_cache(cfg: ModelConfig, B: int, max_seq: int, dtype=None):
     return cache
 
 
-def decode_step(params, cfg: ModelConfig, token, cache, pos, ctx_extra=None):
+def pageable(cfg: ModelConfig) -> bool:
+    """Paged KV is supported for pure-attention decoders (GQA or MLA,
+    global/local layers only — SSM state, encoders, and vision cross-attn
+    keep per-slot dense state)."""
+    kinds = {_kind_base(k) for k in cfg.layer_pattern}
+    return (kinds <= {"global", "local"} and cfg.attn_type in ("gqa", "mla")
+            and not cfg.encoder and not cfg.vision
+            and cfg.family != "hybrid")
+
+
+def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
+                     dtype=None):
+    """Page-pool KV cache: same pytree structure as ``init_cache`` but the
+    slot-batch axis is a shared page-pool axis and the sequence axis is one
+    page ([n_pages, Hkv, page_size, Dh] per layer for GQA; [n_pages,
+    page_size, R] for MLA latents). Slots address the pool through the
+    [n_slots, P] page table threaded into ``decode_step`` via
+    ``ctx_extra={"page_table": ...}``."""
+    assert pageable(cfg), (cfg.name, cfg.layer_pattern)
+    return init_cache(cfg, n_pages, page_size, dtype)
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, pos, ctx_extra=None,
+                use_flash: bool = False):
     """token: [B,1] int32; pos: scalar int32 OR [B] int32 per-row positions
     (continuous batching: every slot of a decode batch advances at its own
-    offset). Returns (logits [B,1,V], cache)."""
+    offset). ``ctx_extra={"page_table": [B,P] int32}`` switches attention
+    layers to the paged KV contract (cache built by ``init_paged_cache``);
+    ``use_flash`` routes eligible GQA layers through the ragged Pallas
+    flash-decode kernel. Returns (logits [B,1,V], cache)."""
     B = token.shape[0]
     positions = jnp.broadcast_to(jnp.asarray(pos), (B,))[:, None]
     x = _embed_tokens(params, cfg, token, positions=positions)
     ctx = {"positions": positions}
+    if use_flash:
+        ctx["use_flash"] = True
     if ctx_extra:
         ctx.update(ctx_extra)
     if cfg.family == "hybrid":

@@ -1,2 +1,3 @@
 from .engine import Request, ServingEngine
+from .kv_cache import PagedKVCache, kv_bytes_per_token
 from .swap import model_bytes, pipelined_serve_time, swap_requests

@@ -10,6 +10,16 @@ processing is one batched ``prefill_fn`` call per admission group (a jitted
 scan over the prompt), and decode runs batched across all slots of a tenant
 with per-slot sequence positions.
 
+With ``paged=True`` the KV cache is a :class:`~repro.serving.kv_cache.
+PagedKVCache`: slots share a page pool carved from the ColoredArena (LS/BE
+page sets follow the plan's ``ch_be`` channel split) and admission is
+*page-table* admission — a request enters a slot when ``ceil((prompt +
+max_new) / page_size)`` pages are free, not when a whole ``max_seq`` row is,
+so the same arena bytes sustain more concurrent decode slots. Prefill blits
+whole pages; decode appends one page entry per row (no full-cache rewrite);
+pages are freed at eviction. ``use_flash=True`` additionally routes decode
+attention through the ragged Pallas flash-decode kernel.
+
 **Sim backend** (``backend="sim"``): drives the discrete-event
 ``core.simulator.GPUSimulator`` with the same request stream, so the paper's
 Fig. 5/6/11/12 scenario sweeps and the real reduced-scale execution share one
@@ -43,13 +53,14 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..core.compute import ComputePolicy
-from ..core.coloring.allocator import ColoredArena, split_channels
+from ..core.coloring.allocator import (ColoredArena, OutOfColoredMemory,
+                                       split_channels)
 from ..core.controller import ResourcePlan
-from ..core.costmodel import param_count
-from ..core.simulator import (GPU_DEVICES, GPUSimulator, Tenant,
+from ..core.simulator import (GPU_DEVICES, GPUSimulator, Kernel, Tenant,
                               request_kernels)
 from ..core.tenancy import TenantSpec
 from ..models import transformer as tf
+from .kv_cache import PagedKVCache, kv_bytes_per_token
 
 
 @dataclass
@@ -64,6 +75,7 @@ class Request:
     t_done: Optional[float] = None
     output: Optional[list] = None
     slot: Optional[int] = None
+    failed: bool = False           # rejected (e.g. can never fit KV pages)
 
     @property
     def latency(self):
@@ -90,6 +102,8 @@ class _TenantRT:
     last_tok: Optional[np.ndarray] = None   # [n_slots] last emitted token
     active: List[Optional[Request]] = field(default_factory=list)
     alloc_name: Optional[str] = None
+    kv: Optional[PagedKVCache] = None       # page-table state (paged mode)
+    peak_active: int = 0                    # max concurrent decode slots seen
     # sim-backend knobs / results
     closed_loop: bool = False
     sim_seq: Optional[int] = None
@@ -126,15 +140,33 @@ class _JaxBackend:
         eng = self.engine
         cfg = rt.cfg
 
-        def _prefill(p, tokens):
-            return tf.prefill(p, cfg, {"tokens": tokens}, eng.max_seq)
+        def _prefill(p, tokens, cap):
+            return tf.prefill(p, cfg, {"tokens": tokens}, cap)
 
         def _decode(p, tok, cache, pos):
-            return tf.decode_step(p, cfg, tok, cache, pos)
+            return tf.decode_step(p, cfg, tok, cache, pos,
+                                  use_flash=eng.use_flash)
 
-        rt.prefill_fn = jax.jit(_prefill)
-        rt.decode_fn = jax.jit(_decode)
-        rt.cache = tf.init_cache(cfg, rt.n_slots, eng.max_seq)
+        def _decode_paged(p, tok, cache, pos, pt):
+            return tf.decode_step(p, cfg, tok, cache, pos,
+                                  ctx_extra={"page_table": pt},
+                                  use_flash=eng.use_flash)
+
+        rt.prefill_fn = jax.jit(_prefill, static_argnums=2)
+        # the previous cache is dead after each decode step — donate it so
+        # the one-token append is in-place instead of a full pool copy
+        if eng.paged:
+            chans = None
+            if eng.arena is not None:
+                chans = eng.ls_ch if rt.spec.is_ls else eng.be_ch
+            rt.kv = PagedKVCache(cfg, rt.n_slots, eng.max_seq, eng.page_size,
+                                 n_pages=eng.kv_pages, arena=eng.arena,
+                                 channels=chans, name=rt.spec.name)
+            rt.cache = rt.kv.init_pools()
+            rt.decode_fn = jax.jit(_decode_paged, donate_argnums=(2,))
+        else:
+            rt.cache = tf.init_cache(cfg, rt.n_slots, eng.max_seq)
+            rt.decode_fn = jax.jit(_decode, donate_argnums=(2,))
         rt.pos = np.zeros(rt.n_slots, np.int32)
         rt.last_tok = np.zeros(rt.n_slots, np.int32)
         rt.active = [None] * rt.n_slots
@@ -147,30 +179,68 @@ class _JaxBackend:
         rt.active[slot] = None
         rt.pos[slot] = 0
         rt.last_tok[slot] = 0
+        if rt.kv is not None:
+            rt.kv.free_slot(slot)
+
+    def _take(self, rt: _TenantRT) -> List[Request]:
+        """Pop admissible requests off the queue. Whole-row mode: one per
+        free slot. Paged mode: additionally page-gated — a request needs
+        pages for its full extent (FIFO, no head-of-line bypass)."""
+        eng = self.engine
+        free = [s for s, r in enumerate(rt.active) if r is None]
+        if rt.kv is None:
+            take = rt.queue[: len(free)]
+            del rt.queue[: len(take)]
+            for r in take:
+                r.slot = free.pop(0)
+            return take
+        take = []
+        while rt.queue and free:
+            req = rt.queue[0]
+            need = min(len(req.tokens) + req.max_new, eng.max_seq)
+            if rt.kv.pages_for(need) > rt.kv.n_pages:
+                # can never fit, even with an empty pool: fail it rather
+                # than deadlock the queue head forever
+                req.t_done = eng.clock()
+                req.output = []
+                req.failed = True
+                rt.done.append(rt.queue.pop(0))
+                continue
+            if not rt.kv.can_admit(need):
+                break
+            req.slot = free.pop(0)
+            rt.kv.alloc_slot(req.slot, need)
+            take.append(rt.queue.pop(0))
+        return take
 
     def _admit(self, rt: _TenantRT) -> bool:
         """Fill free slots from the queue: one batched prefill call per
-        prompt-length group (each admitted request gets its first token)."""
+        prompt-length group (each admitted request gets its first token).
+        Paged mode prefills only to the page-aligned prompt length."""
         eng = self.engine
-        free = [s for s, r in enumerate(rt.active) if r is None]
-        take = rt.queue[: len(free)]
+        take = self._take(rt)
         if not take:
             return False
-        del rt.queue[: len(take)]
         by_len: Dict[int, List[Request]] = {}
         for r in take:
             by_len.setdefault(len(r.tokens), []).append(r)
         for L, reqs in by_len.items():
             toks = jnp.asarray(np.stack([r.tokens for r in reqs]))
-            last_logits, pcache = rt.prefill_fn(rt.params, toks)
+            slots = [r.slot for r in reqs]
+            if rt.kv is not None:
+                cap = rt.kv.pages_for(L) * rt.kv.page_size
+                last_logits, pcache = rt.prefill_fn(rt.params, toks, cap)
+                rt.cache = rt.kv.write_prefill(rt.cache, pcache, slots, L)
+            else:
+                last_logits, pcache = rt.prefill_fn(rt.params, toks,
+                                                    eng.max_seq)
+                rt.cache = _scatter_rows(rt.cache, pcache,
+                                         jnp.asarray(slots, jnp.int32))
             first = np.asarray(jnp.argmax(last_logits[:, 0], axis=-1))
-            slots = [free.pop(0) for _ in reqs]
-            rt.cache = _scatter_rows(rt.cache, pcache,
-                                     jnp.asarray(slots, jnp.int32))
             now = eng.clock()
             for j, req in enumerate(reqs):
                 s = slots[j]
-                req.slot, req.t_admit, req.t_first = s, now, now
+                req.t_admit, req.t_first = now, now
                 req.output = [int(first[j])]
                 rt.active[s] = req
                 rt.pos[s] = L
@@ -178,14 +248,23 @@ class _JaxBackend:
                 if len(req.output) >= max(req.max_new, 1) \
                         or rt.pos[s] >= eng.max_seq:
                     self._finish(rt, s)
+        rt.peak_active = max(rt.peak_active,
+                             sum(r is not None for r in rt.active))
         return True
 
     def _decode(self, rt: _TenantRT):
         """One batched decode across every active slot of this tenant."""
         eng = self.engine
+        rt.peak_active = max(rt.peak_active,
+                             sum(r is not None for r in rt.active))
         toks = jnp.asarray(rt.last_tok[:, None])
-        logits, rt.cache = rt.decode_fn(rt.params, toks, rt.cache,
-                                        jnp.asarray(rt.pos))
+        if rt.kv is not None:
+            logits, rt.cache = rt.decode_fn(rt.params, toks, rt.cache,
+                                            jnp.asarray(rt.pos),
+                                            rt.kv.device_page_table())
+        else:
+            logits, rt.cache = rt.decode_fn(rt.params, toks, rt.cache,
+                                            jnp.asarray(rt.pos))
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
         for s, req in enumerate(rt.active):
             if req is None:
@@ -241,14 +320,38 @@ class _SimBackend:
             arrivals = [r.t_submit for r in pending]
             if arrivals:
                 t_max = max(t_max, arrivals[-1])
+            # explicit sim_seq keeps the scenario's pure-prefill modeling
+            # (fig12 etc.); stream-derived tenants split the request into a
+            # prompt-sized prefill plus per-step decode kernels, so the
+            # generated tokens are costed once, in the decode phase
+            steps = 0
             if rt.sim_seq is not None:
                 S = rt.sim_seq
             elif pending:
-                S = len(pending[0].tokens) + pending[0].max_new
+                S = max(len(pending[0].tokens), 1)
+                steps = pending[0].max_new
             else:
                 S = eng.max_seq
-            kern = request_kernels(rt.cfg, max(1, rt.spec.batch_size), S,
-                                   "prefill", self.dev, rt.max_kernels)
+            B = max(1, rt.spec.batch_size)
+            kern = request_kernels(rt.cfg, B, S, "prefill", self.dev,
+                                   rt.max_kernels)
+            # decode phase carries the KV-cache *write* traffic of the
+            # engine's actual decode path — paged appends are O(tokens);
+            # whole-row mask-scatter rewrites the window. Kept at (chunked)
+            # step granularity so the simulator can still preempt/readmit
+            # at decode-step boundaries, like the real engine's quanta.
+            if steps > 0:
+                dec = request_kernels(
+                    rt.cfg, B, S + steps, "decode", self.dev,
+                    rt.max_kernels,
+                    kv_write="paged" if eng.paged else "scatter")
+                f = sum(k.flops for k in dec)
+                b = sum(k.bytes for k in dec)
+                n_chunks = min(steps, max(1, rt.max_kernels))
+                per = steps / n_chunks
+                step_k = Kernel(f * per, b * per,
+                                b / self.dev.hbm_bw > f / self.dev.peak_flops)
+                kern = kern + [step_k] * n_chunks
             tn = Tenant(name, rt.spec.priority, kern,
                         arrivals=arrivals or None,
                         closed_loop=rt.closed_loop)
@@ -289,6 +392,14 @@ class ServingEngine:
       backend      "jax" (real execution, continuous batching) | "sim"
                    (contention simulator; pass arrival times via submit(at=)).
       slots_ls/be  decode-slot pool size per tenant class (JAX backend).
+      paged        page-table KV admission (PagedKVCache) instead of
+                   whole-row slots; with coloring, page pools are carved
+                   from the tenant class's arena channel set.
+      page_size    tokens per KV page (paged mode).
+      kv_pages     page-pool size override per tenant (default: dense-row
+                   capacity equivalent, or the arena class capacity).
+      use_flash    route decode attention through the ragged Pallas
+                   flash-decode kernel (interpret mode off-TPU).
       device       DeviceSpec or name for the sim backend.
       policy       ComputePolicy kind for the sim backend.
     """
@@ -297,8 +408,14 @@ class ServingEngine:
                  plan: Optional[ResourcePlan] = None, coloring: bool = False,
                  ch_be: float = 1 / 3, arena_bytes: int = 64 << 20,
                  hash_model=None, now_fn=None, slots_ls: int = 4,
-                 slots_be: int = 4, device="tpu-v5e", policy: str = "sgdrc"):
+                 slots_be: int = 4, paged: bool = False, page_size: int = 8,
+                 kv_pages: Optional[int] = None, use_flash: bool = False,
+                 device="tpu-v5e", policy: str = "sgdrc"):
         self.max_seq = max_seq
+        self.paged = paged
+        self.page_size = page_size
+        self.kv_pages = kv_pages
+        self.use_flash = use_flash
         self.tenants: Dict[str, _TenantRT] = {}
         self.clock = now_fn or time.perf_counter
         self._t0 = self.clock()     # epoch for sim-backend virtual arrivals
@@ -340,17 +457,32 @@ class ServingEngine:
             params = tf.init_params(
                 key if key is not None
                 else jax.random.key(hash(spec.name) % 2**31), cfg)
+        n_slots = n_slots or (self.slots_ls if spec.is_ls else self.slots_be)
+        row_bytes = chans = None
+        if self.arena is not None:
+            chans = self.ls_ch if spec.is_ls else self.be_ch
+            if not self.paged:
+                # whole-row admission: the arena must hold one dense
+                # [max_seq] KV row per slot — cap the pool to what the
+                # class's colored bytes actually fit (paged mode instead
+                # allocates per-request page groups at admission)
+                row_bytes = kv_bytes_per_token(cfg) * self.max_seq
+                cap = (self.arena.free_pages(chans) * self.arena.granularity
+                       // max(row_bytes, 1))
+                if cap < 1:
+                    raise OutOfColoredMemory(
+                        f"{spec.name}: arena cannot hold one KV row")
+                n_slots = min(n_slots, int(cap))
         rt = _TenantRT(spec, cfg, params, decode_fn=None, prefill_fn=None,
-                       n_slots=n_slots or (self.slots_ls if spec.is_ls
-                                           else self.slots_be),
+                       n_slots=n_slots,
                        closed_loop=closed_loop, sim_seq=sim_seq,
                        max_kernels=max_kernels)
         self.backend.add_tenant(rt)
-        if self.arena is not None:
-            chans = self.ls_ch if spec.is_ls else self.be_ch
-            # KV arena slice scales with the slot pool (continuous batching)
-            kv_bytes = int(param_count(cfg) * 0.02) * rt.n_slots + 1024
-            self.arena.alloc(spec.name, kv_bytes, chans)
+        if self.arena is not None and not self.paged:
+            # SSM-state tenants have no attention KV; keep a nonzero slice
+            # so their placement is still tracked/colored
+            self.arena.alloc(spec.name,
+                             max(row_bytes * rt.n_slots, 1024), chans)
             rt.alloc_name = spec.name
         self.tenants[spec.name] = rt
         return rt
@@ -375,13 +507,13 @@ class ServingEngine:
         return req
 
     # ------------------------------------------------------------------
-    def _pick(self, rts: List[_TenantRT]) -> _TenantRT:
+    def _pick(self, rts: List[_TenantRT]) -> List[_TenantRT]:
         """Earliest outstanding request first (FIFO across tenants)."""
         def key(rt):
             ts = [r.t_submit for r in rt.queue]
             ts += [r.t_submit for r in rt.active if r is not None]
             return min(ts) if ts else float("inf")
-        return min(rts, key=key)
+        return sorted(rts, key=key)
 
     def step(self) -> bool:
         """One engine quantum (JAX backend): choose a tenant class via the
@@ -406,13 +538,17 @@ class ServingEngine:
             pick = be   # resource lending: BE runs at full rate when LS idles
         else:
             return False
-        rt = self._pick(pick)
-        ran = self.backend.quantum(rt)
-        if ran:
-            self.events.append((self._step_idx,
-                                rt.spec.name, rt.spec.priority))
-            self._step_idx += 1
-        return ran
+        other = be if pick is ls else ls
+        # a tenant whose queue head is blocked (paged mode: waiting on KV
+        # pages another tenant holds) must not strand the rest: fall through
+        # to the next tenant of the class, then to the other class
+        for rt in self._pick(pick) + self._pick(other):
+            if self.backend.quantum(rt):
+                self.events.append((self._step_idx,
+                                    rt.spec.name, rt.spec.priority))
+                self._step_idx += 1
+                return True
+        return False
 
     def run_until_idle(self, max_steps: int = 100_000, horizon=None) -> int:
         """JAX backend: run quanta until no tenant has work (returns #quanta).
@@ -435,16 +571,24 @@ class ServingEngine:
                "BE": {"done": [], "tokens": 0, "slo_ok": 0, "slo_n": 0,
                       "completed": 0}}
         for name, rt in self.tenants.items():
-            lats = [r.latency for r in rt.done if r.latency is not None]
+            served = [r for r in rt.done if not r.failed]
+            n_failed = len(rt.done) - len(served)
+            lats = [r.latency for r in served if r.latency is not None]
             out[name] = {
-                "completed": len(rt.done) + rt.sim_completed,
+                "completed": len(served) + rt.sim_completed,
+                "failed": n_failed,
                 "p50_ms": float(np.percentile(lats, 50) * 1e3) if lats else None,
                 "p99_ms": float(np.percentile(lats, 99) * 1e3) if lats else None,
+                "peak_active": rt.peak_active,
             }
+            if rt.kv is not None:
+                out[name]["kv_pages"] = {"total": rt.kv.n_pages,
+                                         "in_use": rt.kv.used_pages,
+                                         "page_size": rt.kv.page_size}
             c = cls[rt.spec.priority]
             c["done"] += lats
-            c["completed"] += len(rt.done) + rt.sim_completed
-            c["tokens"] += sum(len(r.output or ()) for r in rt.done)
+            c["completed"] += len(served) + rt.sim_completed
+            c["tokens"] += sum(len(r.output or ()) for r in served)
             if rt.spec.slo_ms is not None:
                 c["slo_n"] += len(lats)
                 c["slo_ok"] += sum(l * 1e3 <= rt.spec.slo_ms for l in lats)

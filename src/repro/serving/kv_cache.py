@@ -1,0 +1,214 @@
+"""Paged KV cache for the serving engine (vLLM-style paging, SGDRC-colored).
+
+The KV cache of a tenant's whole decode-slot pool lives in one shared *page
+pool* per layer ([n_pages, Hkv, page_size, Dh] for GQA; [n_pages, page_size,
+R] for MLA latents) instead of per-slot whole rows of ``max_seq`` tokens.
+Each slot addresses the pool through a page table ([n_slots, P] int32);
+prefill writes whole pages, decode appends one (page, offset) entry per row
+via a scatter — O(tokens) traffic, never a full-cache rewrite.
+
+SGDRC tie-in: pages are *bimodal-tensor allocations* — when a
+:class:`~repro.core.coloring.allocator.ColoredArena` is attached, every page
+group a request acquires is carved from the tenant class's VRAM-channel set
+(LS/BE split per the ResourcePlan's ``ch_be``), so KV growth stays inside
+the class's bandwidth partition and admission is bounded by *colored* bytes,
+not slot count. Pages are allocated at admission and released at eviction;
+a request is admitted when enough pages are free — not when a whole
+``max_seq`` row is — which is the engine's concurrency/throughput win.
+
+Host-side metadata (page tables, free lists) lives here; the device pools
+are a plain cache pytree (built by ``models.transformer.init_paged_cache``)
+owned by the engine and threaded through ``decode_step``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..core.coloring.allocator import ColoredArena, OutOfColoredMemory
+from ..core.costmodel import kv_token_bytes
+from ..models import transformer as tf
+from ..models.common import dt
+
+
+def kv_bytes_per_token(cfg: ModelConfig, dtype_bytes: Optional[int] = None
+                       ) -> int:
+    """KV-cache bytes one token occupies across all layers (GQA: 2·Hkv·Dh
+    per attention layer; MLA: R + rope latent floats per layer; hybrid
+    models add one shared-attention cache per layer period). Per-layer
+    figure comes from ``core.costmodel.kv_token_bytes`` — one formula for
+    the simulator's write-cost term and this capacity accounting."""
+    if dtype_bytes is None:
+        dtype_bytes = jnp.dtype(dt(cfg.activation_dtype)).itemsize
+    tok = kv_token_bytes(cfg, dtype_bytes)
+    n_attn = sum(1 for kind in cfg.pattern
+                 if kind.replace("_shared", "") in ("global", "local"))
+    total = n_attn * tok
+    if any(k.endswith("_shared") for k in cfg.layer_pattern):
+        # init_cache allocates ONE shared KV cache per layer period
+        n_periods = ((cfg.num_layers - cfg.n_prefix)
+                     // max(len(cfg.layer_pattern), 1))
+        total += n_periods * tok
+    return int(total)
+
+
+class PagedKVCache:
+    """Page-table bookkeeping for one tenant's slot pool.
+
+    Parameters:
+      cfg         model whose KV the pool holds (must be ``tf.pageable``)
+      n_slots     decode batch width (page-table rows)
+      max_seq     per-slot window cap: P = ceil(max_seq / page_size)
+      page_size   tokens per page
+      n_pages     pool size; default gives the same capacity as ``n_slots``
+                  dense rows (the win is *allocation* granularity). With an
+                  arena attached the pool is capped by the channel set's
+                  free colored bytes.
+      arena       optional ColoredArena; page groups become named colored
+                  allocations (alloc at admit / release at evict)
+      channels    the tenant class's channel set within the arena
+    """
+
+    def __init__(self, cfg: ModelConfig, n_slots: int, max_seq: int,
+                 page_size: int, *, n_pages: Optional[int] = None,
+                 dtype=None, arena: Optional[ColoredArena] = None,
+                 channels: Optional[Sequence[int]] = None, name: str = "kv"):
+        assert tf.pageable(cfg), f"{cfg.name} is not pageable"
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.page_size = page_size
+        self.pages_per_slot = -(-max_seq // page_size)
+        dtype = dtype or dt(cfg.activation_dtype)
+        self.bytes_per_page = (
+            kv_bytes_per_token(cfg, jnp.dtype(dtype).itemsize) * page_size)
+        self.arena, self.channels, self.name = arena, channels, name
+        if arena is not None:
+            cap = (arena.free_pages(channels) * arena.granularity
+                   // max(self.bytes_per_page, 1))
+            n_pages = min(n_pages, cap) if n_pages else cap
+        elif n_pages is None:
+            n_pages = n_slots * self.pages_per_slot
+        assert n_pages > 0, "arena too small for a single KV page"
+        self.n_pages = n_pages
+        # sentinel n_pages = unmapped: positive out-of-bounds, so device
+        # scatters drop the write (negative indices would wrap)
+        self.page_table = np.full((n_slots, self.pages_per_slot), n_pages,
+                                  np.int32)
+        self.slot_pages: List[List[int]] = [[] for _ in range(n_slots)]
+        self.free_list: List[int] = list(range(n_pages))[::-1]
+        self._pt_dev = None          # device copy, refreshed on alloc/free
+
+    # -- capacity ------------------------------------------------------
+    def pages_for(self, tokens: int) -> int:
+        return -(-min(tokens, self.max_seq) // self.page_size)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self.free_list)
+
+    @property
+    def used_pages(self) -> int:
+        return self.n_pages - len(self.free_list)
+
+    def can_admit(self, tokens: int) -> bool:
+        n = self.pages_for(tokens)
+        if n > len(self.free_list):
+            return False
+        if self.arena is not None:
+            # the arena is shared with other tenants: re-check colored bytes
+            need = -(-n * self.bytes_per_page // self.arena.granularity)
+            return self.arena.free_pages(self.channels) >= need
+        return True
+
+    # -- alloc / free at step boundaries -------------------------------
+    def alloc_slot(self, slot: int, tokens: int) -> List[int]:
+        """Reserve pages for a request's full extent (prompt + max_new,
+        capped at max_seq) and map them into the slot's page table."""
+        n = self.pages_for(tokens)
+        assert not self.slot_pages[slot], f"slot {slot} already mapped"
+        if n > len(self.free_list):
+            raise OutOfColoredMemory(f"{self.name}: need {n} KV pages")
+        if self.arena is not None:
+            self.arena.alloc(f"{self.name}:s{slot}", n * self.bytes_per_page,
+                             self.channels)
+        pages = [self.free_list.pop() for _ in range(n)]
+        self.slot_pages[slot] = pages
+        self.page_table[slot, :n] = pages
+        self._pt_dev = None
+        return pages
+
+    def free_slot(self, slot: int):
+        pages = self.slot_pages[slot]
+        if not pages:
+            return
+        self.free_list.extend(pages)
+        self.slot_pages[slot] = []
+        self.page_table[slot, :] = self.n_pages
+        self._pt_dev = None
+        if self.arena is not None:
+            self.arena.release(f"{self.name}:s{slot}")
+
+    def release(self):
+        """Return every live page group to the arena (tenant teardown)."""
+        for slot in range(self.n_slots):
+            self.free_slot(slot)
+
+    # -- device-side structures ----------------------------------------
+    def init_pools(self, dtype=None):
+        return tf.init_paged_cache(self.cfg, self.n_pages, self.page_size,
+                                   dtype)
+
+    def device_page_table(self):
+        # cached between admit/evict boundaries: pure-decode stretches must
+        # not pay a host->device transfer per step for an unchanged table
+        if self._pt_dev is None:
+            self._pt_dev = jnp.asarray(self.page_table)
+        return self._pt_dev
+
+    def write_prefill(self, pools, prefill_cache, slots: Sequence[int],
+                      length: int):
+        """Blit freshly prefilled dense rows into the slots' pages as
+        whole-page writes. ``prefill_cache`` leaves carry [.., B, ..,
+        Lp, ..] with Lp a multiple of page_size covering ``length``;
+        pageable leaves have their sequence axis at -2. Pools are donated
+        into the jitted blit, so this is an in-place page scatter, not a
+        pool copy per admission group."""
+        ps = self.page_size
+        n_chunks = self.pages_for(max(length, 1))
+        flat_pages = np.concatenate(
+            [self.page_table[s, :n_chunks] for s in slots])
+        idx = jnp.asarray(flat_pages, jnp.int32)
+        B = len(slots)
+        out = dict(pools)
+        if "prefix" in pools:
+            out["prefix"] = [
+                jax.tree.map(functools.partial(_blit_pages, idx=idx, B=B,
+                                               n_chunks=n_chunks, ps=ps,
+                                               batch_axis=0), pp, dp)
+                for pp, dp in zip(pools["prefix"], prefill_cache["prefix"])]
+        out["layers"] = jax.tree.map(
+            functools.partial(_blit_pages, idx=idx, B=B, n_chunks=n_chunks,
+                              ps=ps, batch_axis=1),
+            pools["layers"], prefill_cache["layers"])
+        return out
+
+
+@functools.partial(jax.jit, donate_argnums=(0,),
+                   static_argnames=("B", "n_chunks", "ps", "batch_axis"))
+def _blit_pages(pool, dense, *, idx, B, n_chunks, ps, batch_axis):
+    """dense: [..B at batch_axis.., *mid, Lp+, T]; slice the first
+    n_chunks*ps tokens, split the seq axis into (n_chunks, ps) chunks and
+    scatter them flat onto the pool's (donated) page axis."""
+    x = jax.lax.slice_in_dim(dense, 0, n_chunks * ps, axis=dense.ndim - 2)
+    x = x.reshape(x.shape[:-2] + (n_chunks, ps) + x.shape[-1:])
+    x = jnp.moveaxis(x, -3, batch_axis + 1)
+    x = x.reshape(x.shape[:batch_axis]
+                  + (B * n_chunks,) + x.shape[batch_axis + 2:])
+    return pool.at[(slice(None),) * batch_axis + (idx,)].set(
+        x.astype(pool.dtype), mode="drop")

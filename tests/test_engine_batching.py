@@ -156,6 +156,113 @@ def test_grid_search_plan_roundtrip(tiny):
     assert m["_class"]["LS"]["slo_attainment"] == 1.0
 
 
+def test_paged_engine_matches_whole_row(tiny):
+    """Page-table serving (paged pools + page-aligned prefill + per-page
+    appends) emits token-for-token the whole-row engine's output — and so
+    does the paged engine with the ragged Pallas flash-decode kernel."""
+    cfg, params = tiny
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(0, 100, L) for L in (4, 6, 5)]
+
+    def serve(**kw):
+        eng = ServingEngine(max_seq=MAX_SEQ, slots_ls=3, **kw)
+        eng.add_tenant(TenantSpec("ls0", "LS"), cfg, params=params)
+        reqs = [eng.submit("ls0", p, max_new=5) for p in prompts]
+        eng.run_until_idle()
+        return [r.output for r in reqs]
+
+    ref = serve()
+    assert serve(paged=True, page_size=4) == ref
+    assert serve(paged=True, page_size=4, use_flash=True) == ref
+
+
+def test_paged_admission_beats_whole_row(tiny, fake_hash_model):
+    """At equal arena bytes, page-table admission sustains strictly more
+    concurrent decode slots than whole-row slots (the throughput win), with
+    per-class SLO metrics still reported and zero isolation violations."""
+    cfg, params = tiny
+    # LS channel set = 3/4 of 40KB = 30KB: one 24KB whole row (max_seq=24 x
+    # 1KB/token) vs seven 4KB pages -> a 2-page request admits 3-wide
+    arena_bytes = 40 << 10
+
+    def serve(paged):
+        rng = np.random.default_rng(17)
+        eng = ServingEngine(max_seq=MAX_SEQ, slots_ls=4, coloring=True,
+                            hash_model=fake_hash_model, ch_be=0.25,
+                            arena_bytes=arena_bytes, paged=paged,
+                            page_size=4)
+        eng.add_tenant(TenantSpec("ls0", "LS", slo_ms=600_000.0), cfg,
+                       params=params)
+        for _ in range(3):
+            eng.submit("ls0", rng.integers(0, 100, 4), max_new=4)
+        eng.run_until_idle()
+        return eng.metrics()
+
+    dense, paged = serve(False), serve(True)
+    assert dense["ls0"]["completed"] == paged["ls0"]["completed"] == 3
+    assert dense["ls0"]["peak_active"] == 1        # arena fits one row
+    assert paged["ls0"]["peak_active"] > dense["ls0"]["peak_active"]
+    assert paged["ls0"]["kv_pages"]["total"] >= 7
+    assert paged["ls0"]["kv_pages"]["in_use"] == 0   # all freed at finish
+    assert paged["_class"]["LS"]["slo_attainment"] == 1.0
+    assert paged["_class"]["LS"]["tokens_per_s"] > 0
+
+
+def test_paged_queue_drains_when_pages_free(tiny):
+    """More requests than the page pool holds at once: admission stalls on
+    pages, resumes as finishing requests release them, and every request
+    completes."""
+    cfg, params = tiny
+    rng = np.random.default_rng(19)
+    eng = ServingEngine(max_seq=MAX_SEQ, slots_ls=8, paged=True, page_size=4,
+                        kv_pages=4)     # pool: 2 concurrent 2-page requests
+    eng.add_tenant(TenantSpec("ls0", "LS"), cfg, params=params)
+    reqs = [eng.submit("ls0", rng.integers(0, 100, 4), max_new=3)
+            for _ in range(5)]
+    eng.run_until_idle()
+    m = eng.metrics()
+    assert m["ls0"]["completed"] == 5
+    assert m["ls0"]["peak_active"] <= 2
+    assert all(r.output is not None and len(r.output) == 3 for r in reqs)
+
+
+def test_paged_impossible_request_fails_not_deadlocks(tiny):
+    """A request that can never fit the page pool is failed (empty output)
+    instead of blocking the queue head forever; later requests still run."""
+    cfg, params = tiny
+    rng = np.random.default_rng(23)
+    eng = ServingEngine(max_seq=MAX_SEQ, slots_ls=2, paged=True, page_size=4,
+                        kv_pages=2)      # pool holds 8 tokens total
+    eng.add_tenant(TenantSpec("ls0", "LS"), cfg, params=params)
+    bad = eng.submit("ls0", rng.integers(0, 100, 8), max_new=8)   # 4 pages
+    ok = eng.submit("ls0", rng.integers(0, 100, 4), max_new=3)    # 2 pages
+    eng.run_until_idle()
+    assert bad.failed and bad.output == [] and bad.t_done is not None
+    assert ok.output is not None and len(ok.output) == 3
+    m = eng.metrics()
+    assert m["ls0"]["completed"] == 1      # the failed request doesn't count
+    assert m["ls0"]["failed"] == 1
+
+
+def test_sim_decode_phase_reflects_kv_write_mode(tiny):
+    """Stream-derived sim tenants (no sim_seq) model a prompt-sized prefill
+    plus per-step decode kernels whose KV-write term follows the engine
+    mode: the paged engine's modeled latency is strictly below the
+    whole-row mask-scatter's."""
+    cfg, _ = tiny
+
+    def p99(paged):
+        eng = ServingEngine(max_seq=MAX_SEQ, backend="sim",
+                            device="rtx-a5500", paged=paged)
+        eng.add_tenant(TenantSpec("ls0", "LS", batch_size=1), cfg)
+        for t in np.linspace(0.0, 0.5, 8):
+            eng.submit("ls0", np.zeros(8, np.int32), max_new=16, at=float(t))
+        eng.run_until_idle(horizon=5.0)
+        return eng.metrics()["_class"]["LS"]["p99_ms"]
+
+    assert p99(True) < p99(False)
+
+
 def test_sim_backend_same_request_stream(tiny):
     """The sim backend consumes the same submit() stream and produces
     completions + class metrics without touching the device."""

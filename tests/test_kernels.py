@@ -80,6 +80,91 @@ def test_decode_attention_sweep(B, Smax, H, Hkv, D, pos, dtype):
                                rtol=tol, atol=tol)
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_ragged_pos(dtype):
+    """Vector per-row positions (continuous batching): each row attends to
+    its own valid window only."""
+    B, Smax, H, Hkv, D = 4, 256, 8, 2, 64
+    ks = jax.random.split(jax.random.key(6), 3)
+    q = _rand(ks[0], (B, H, D), dtype)
+    kc = _rand(ks[1], (B, Smax, Hkv, D), dtype)
+    vc = _rand(ks[2], (B, Smax, Hkv, D), dtype)
+    pos = jnp.asarray([0, 17, 128, 255], jnp.int32)
+    out = ops.decode_attention(q, kc, vc, pos, block_k=64)
+    want = ref.ref_decode_attention(q, kc, vc, pos)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("Smax,block_k", [(192, 128), (100, 64)])
+def test_decode_attention_nondividing_window(Smax, block_k):
+    """Cache windows that block_k doesn't divide (e.g. an engine max_seq of
+    prompt+max_new+slack) lower via the largest dividing block."""
+    B, H, Hkv, D = 2, 4, 2, 64
+    ks = jax.random.split(jax.random.key(9), 3)
+    q = _rand(ks[0], (B, H, D), jnp.float32)
+    kc = _rand(ks[1], (B, Smax, Hkv, D), jnp.float32)
+    vc = _rand(ks[2], (B, Smax, Hkv, D), jnp.float32)
+    pos = jnp.asarray([7, Smax - 1], jnp.int32)
+    out = ops.decode_attention(q, kc, vc, pos, block_k=block_k)
+    want = ref.ref_decode_attention(q, kc, vc, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_kv_major_layout():
+    """The KV-major serving layout ([B,Hkv,S,D]) gives the same result as
+    the default [B,S,Hkv,D] without the wrapper transpose."""
+    B, Smax, H, Hkv, D = 2, 128, 4, 2, 64
+    ks = jax.random.split(jax.random.key(7), 3)
+    q = _rand(ks[0], (B, H, D), jnp.float32)
+    kc = _rand(ks[1], (B, Smax, Hkv, D), jnp.float32)
+    vc = _rand(ks[2], (B, Smax, Hkv, D), jnp.float32)
+    pos = jnp.asarray([3, 100], jnp.int32)
+    a = ops.decode_attention(q, kc, vc, pos, block_k=32)
+    b = ops.decode_attention(q, kc.transpose(0, 2, 1, 3),
+                             vc.transpose(0, 2, 1, 3), pos, block_k=32,
+                             kv_layout="bhsd")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_decode_attention_paged_matches_dense():
+    """Paged flash-decode through a shuffled page table equals dense decode
+    over the same logical KV, including rows with partially-mapped tables."""
+    B, Smax, H, Hkv, D, ps = 3, 128, 8, 2, 64, 16
+    P = Smax // ps
+    n_pages = 32
+    ks = jax.random.split(jax.random.key(8), 3)
+    q = _rand(ks[0], (B, H, D), jnp.float32)
+    kc = _rand(ks[1], (B, Smax, Hkv, D), jnp.float32)
+    vc = _rand(ks[2], (B, Smax, Hkv, D), jnp.float32)
+    pos = jnp.asarray([5, 63, 127], jnp.int32)
+    rng = np.random.default_rng(0)
+    pages = rng.permutation(n_pages)[:B * P].reshape(B, P)
+    kp = np.zeros((n_pages, Hkv, ps, D), np.float32)
+    vp = np.zeros((n_pages, Hkv, ps, D), np.float32)
+    for b in range(B):
+        for j in range(P):
+            kp[pages[b, j]] = np.asarray(kc)[b, j * ps:(j + 1) * ps] \
+                .transpose(1, 0, 2)
+            vp[pages[b, j]] = np.asarray(vc)[b, j * ps:(j + 1) * ps] \
+                .transpose(1, 0, 2)
+    pt = pages.astype(np.int32)
+    pt[0, 1:] = n_pages            # row 0 (pos 5 < ps): rest unmapped
+    out = ops.decode_attention_paged(jnp.asarray(q), jnp.asarray(kp),
+                                     jnp.asarray(vp), jnp.asarray(pt), pos)
+    want = ref.ref_decode_attention(q, kc, vc, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    wantp = ref.ref_decode_attention_paged(jnp.asarray(q), jnp.asarray(kp),
+                                           jnp.asarray(vp), jnp.asarray(pt),
+                                           pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(wantp),
+                               rtol=2e-5, atol=2e-5)
+
+
 # ---------------------------------------------------------------------------
 # SPT gather / scatter
 # ---------------------------------------------------------------------------

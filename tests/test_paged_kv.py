@@ -1,0 +1,192 @@
+"""PagedKVCache: dense-cache equivalence under random admit/evict/decode
+interleavings, page accounting against the ColoredArena, and the scalar-pos
+``dynamic_update_slice`` fast path's bit-equality with the mask-scatter."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs import smoke_config
+from repro.models import attention as attn
+from repro.models import transformer as tf
+from repro.serving.engine import _scatter_rows
+from repro.serving.kv_cache import PagedKVCache, kv_bytes_per_token
+
+MAX_SEQ, PS, SLOTS = 16, 4, 3
+
+
+@functools.lru_cache(maxsize=None)
+def _model():
+    cfg = smoke_config("stablelm-1.6b").replace(
+        num_layers=1, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=128, activation_dtype="float32")
+    params = tf.init_params(jax.random.key(0), cfg)
+    dense_fn = jax.jit(lambda p, t, c, q: tf.decode_step(p, cfg, t, c, q))
+    paged_fn = jax.jit(lambda p, t, c, q, pt: tf.decode_step(
+        p, cfg, t, c, q, ctx_extra={"page_table": pt}))
+    prefill_fn = jax.jit(
+        lambda p, t, cap: tf.prefill(p, cfg, {"tokens": t}, cap),
+        static_argnums=2)
+    return cfg, params, dense_fn, paged_fn, prefill_fn
+
+
+# ---------------------------------------------------------------------------
+# fast-path bit equality (ROADMAP item)
+# ---------------------------------------------------------------------------
+
+def test_gqa_dus_fast_path_bit_equal(tiny_cfg, key):
+    """A scalar pos (dynamic_update_slice write) and the equivalent vector
+    pos (mask-scatter write) produce bit-identical caches and outputs."""
+    cfg = tiny_cfg
+    p = attn.init_gqa(key, "a", cfg, jnp.float32)
+    B, Smax = 3, 16
+    ks = jax.random.split(key, 3)
+    x = jax.random.normal(ks[0], (B, 1, cfg.d_model), jnp.float32)
+    ck = jax.random.normal(ks[1], (B, cfg.num_kv_heads, Smax, cfg.head_dim))
+    cv = jax.random.normal(ks[2], (B, cfg.num_kv_heads, Smax, cfg.head_dim))
+    for pos in (0, 5, Smax - 1, Smax):     # Smax: both paths write nothing
+        o1, k1, v1 = attn.gqa_decode(p, x, cfg, ck, cv, jnp.asarray(pos))
+        o2, k2, v2 = attn.gqa_decode(p, x, cfg, ck, cv,
+                                     jnp.full((B,), pos, jnp.int32))
+        for a, b in ((o1, o2), (k1, k2), (v1, v2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        if pos == Smax:
+            np.testing.assert_array_equal(np.asarray(k1), np.asarray(ck))
+
+
+def test_mla_dus_fast_path_bit_equal(key):
+    cfg = smoke_config("deepseek-v2-236b").replace(
+        num_layers=1, prefix_layers=0, activation_dtype="float32")
+    p = attn.init_mla(key, "m", cfg, jnp.float32)
+    B, Smax = 2, 12
+    ks = jax.random.split(key, 3)
+    x = jax.random.normal(ks[0], (B, 1, cfg.d_model), jnp.float32)
+    ckv = jax.random.normal(ks[1], (B, Smax, cfg.mla.kv_lora_rank))
+    kr = jax.random.normal(ks[2], (B, Smax, cfg.mla.qk_rope_head_dim))
+    for pos in (0, 7, Smax - 1):
+        o1, c1, r1 = attn.mla_decode(p, x, cfg, ckv, kr, jnp.asarray(pos))
+        o2, c2, r2 = attn.mla_decode(p, x, cfg, ckv, kr,
+                                     jnp.full((B,), pos, jnp.int32))
+        for a, b in ((o1, o2), (c1, c2), (r1, r2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# page accounting
+# ---------------------------------------------------------------------------
+
+def test_kv_bytes_per_token():
+    cfg, *_ = _model()
+    # 1 layer x (k + v) x Hkv=2 x Dh=32 x f32
+    assert kv_bytes_per_token(cfg) == 2 * 2 * 32 * 4
+    mla = smoke_config("deepseek-v2-236b")
+    m = mla.mla
+    per = (m.kv_lora_rank + m.qk_rope_head_dim) * 4
+    assert kv_bytes_per_token(mla, 4) == per * mla.num_layers
+
+
+def test_page_alloc_free_accounting():
+    cfg, *_ = _model()
+    kv = PagedKVCache(cfg, SLOTS, MAX_SEQ, PS)
+    assert kv.n_pages == SLOTS * MAX_SEQ // PS
+    assert kv.can_admit(MAX_SEQ)
+    kv.alloc_slot(0, 6)              # 2 pages
+    kv.alloc_slot(1, MAX_SEQ)        # 4 pages
+    assert kv.used_pages == 6
+    assert (kv.page_table[0, :2] < kv.n_pages).all()
+    assert (kv.page_table[0, 2:] == kv.n_pages).all()
+    kv.free_slot(0)
+    assert kv.used_pages == 4
+    assert (kv.page_table[0] == kv.n_pages).all()
+    # fill the pool completely, then over-subscription is refused until a
+    # slot releases its pages
+    kv.alloc_slot(2, MAX_SEQ)
+    kv.alloc_slot(0, MAX_SEQ)
+    assert kv.free_pages == 0 and not kv.can_admit(1)
+    kv.free_slot(2)
+    assert kv.can_admit(MAX_SEQ)
+
+
+def test_arena_backed_pages_respect_channels(fake_hash_model):
+    from repro.core.coloring.allocator import ColoredArena, split_channels
+    cfg, *_ = _model()
+    hm = fake_hash_model
+    arena = ColoredArena(64 << 10, hm.channel_of, hm.num_channels,
+                         hm.granularity)
+    ls_ch, be_ch = split_channels(hm.num_channels, 0.25)
+    kv = PagedKVCache(cfg, SLOTS, MAX_SEQ, PS, arena=arena, channels=ls_ch,
+                      name="t0")
+    kv.alloc_slot(0, MAX_SEQ)
+    a = arena.allocations["t0:s0"]
+    assert arena.isolation_violations(a) == 0
+    kv.free_slot(0)
+    assert "t0:s0" not in arena.allocations
+    kv.alloc_slot(1, MAX_SEQ)        # freed colored pages are reusable
+    kv.release()
+    assert not arena.allocations
+
+
+# ---------------------------------------------------------------------------
+# dense-equivalence property test
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=4, deadline=None)
+def test_paged_roundtrip_random_interleaving(seed):
+    """Random admit/evict/decode interleavings: the paged cache (with page
+    reuse after eviction) produces the same logits as per-slot dense rows."""
+    cfg, params, dense_fn, paged_fn, prefill_fn = _model()
+    rng = np.random.default_rng(seed)
+    kv = PagedKVCache(cfg, SLOTS, MAX_SEQ, PS)
+    pools = kv.init_pools()
+    dense = tf.init_cache(cfg, SLOTS, MAX_SEQ)
+    pos = np.zeros(SLOTS, np.int32)
+    last = np.zeros(SLOTS, np.int32)
+    active = [False] * SLOTS
+
+    for _ in range(8):
+        op = rng.choice(["admit", "decode", "decode", "evict"])
+        free = [s for s in range(SLOTS) if not active[s]]
+        if op == "admit" and free:
+            L = int(rng.integers(2, 7))
+            if not kv.can_admit(MAX_SEQ):
+                continue
+            s = free[0]
+            toks = jnp.asarray(rng.integers(0, 100, (1, L)), jnp.int32)
+            kv.alloc_slot(s, MAX_SEQ)
+            Lp = kv.pages_for(L) * PS
+            lg_d, pc_d = prefill_fn(params, toks, MAX_SEQ)
+            lg_p, pc_p = prefill_fn(params, toks, Lp)
+            np.testing.assert_allclose(np.asarray(lg_d), np.asarray(lg_p),
+                                       rtol=1e-5, atol=1e-5)
+            dense = _scatter_rows(dense, pc_d, jnp.asarray([s], jnp.int32))
+            pools = kv.write_prefill(pools, pc_p, [s], L)
+            pos[s], last[s] = L, int(jnp.argmax(lg_d[0, 0]))
+            active[s] = True
+        elif op == "evict":
+            live = [s for s in range(SLOTS) if active[s]]
+            if not live:
+                continue
+            s = live[int(rng.integers(len(live)))]
+            kv.free_slot(s)
+            active[s], pos[s], last[s] = False, 0, 0
+        elif any(active):
+            toks = jnp.asarray(last[:, None])
+            q = jnp.asarray(pos)
+            lg_d, dense = dense_fn(params, toks, dense, q)
+            lg_p, pools = paged_fn(params, toks, pools, q,
+                                   kv.device_page_table())
+            rows = [s for s in range(SLOTS) if active[s]]
+            np.testing.assert_allclose(np.asarray(lg_d)[rows],
+                                       np.asarray(lg_p)[rows],
+                                       rtol=1e-5, atol=1e-5)
+            nxt = np.asarray(jnp.argmax(lg_d[:, 0], axis=-1))
+            for s in rows:
+                pos[s] += 1
+                last[s] = int(nxt[s])
+                if pos[s] >= MAX_SEQ:
+                    kv.free_slot(s)
+                    active[s], pos[s], last[s] = False, 0, 0
