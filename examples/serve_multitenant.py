@@ -12,7 +12,7 @@ import json
 import numpy as np
 
 from repro.configs import get_config, smoke_config
-from repro.core.controller import grid_search
+from repro.core.controller import OnlineController, grid_search, tidal_frontier
 from repro.core.coloring import gpu_hash_model
 from repro.core.simulator import TPU_V5E, poisson_trace
 from repro.core.tenancy import TenantSpec
@@ -27,12 +27,20 @@ print(f"plan: SM_BE={plan.sm_be:.2f} Ch_BE={plan.ch_be:.2f} "
       f"Thres_DRAM={plan.thres_dram:.2f}")
 
 # -- pod-scale what-if on the full configs (sim backend) --------------------
+# "sgdrc+online" adds the online control plane on top of full SGDRC: a
+# tidal controller over the plan's two-point frontier re-plans sm_be/ch_be
+# every 5 simulated ms, lending BE the whole machine between LS arrivals
 print(f"\n{'policy':<22s} {'LS p99 (ms)':>12s} {'BE thpt (samp/s)':>18s}")
-for policy, coloring in [("temporal", False), ("spatial", False),
-                         ("orion", False), ("sgdrc", False),
-                         ("sgdrc", True)]:
+for policy, coloring, online in [("temporal", False, False),
+                                 ("spatial", False, False),
+                                 ("orion", False, False),
+                                 ("sgdrc", False, False),
+                                 ("sgdrc", True, False),
+                                 ("sgdrc", True, True)]:
+    ctrl = OnlineController(tidal_frontier(plan)) if online else None
     eng = ServingEngine(backend="sim", device="tpu-v5e", policy=policy,
-                        coloring=coloring, plan=plan)
+                        coloring=coloring, plan=plan, controller=ctrl,
+                        control_dt=0.005)
     eng.add_tenant(TenantSpec("ls0", "LS", batch_size=1),
                    get_config("qwen3-1.7b"), sim_seq=128)
     eng.add_tenant(TenantSpec("ls1", "LS", batch_size=1),
@@ -44,16 +52,19 @@ for policy, coloring in [("temporal", False), ("spatial", False),
             eng.submit(name, np.zeros(1, np.int32), max_new=0, at=t)
     eng.run_until_idle(horizon=HORIZON)
     res = eng.sim_result
-    tag = policy + ("+coloring" if coloring else "")
+    tag = policy + ("+coloring" if coloring else "") + \
+        ("+online" if online else "")
     print(f"{tag:<22s} {res.ls_p99()*1e3:>12.1f} "
           f"{res.be_throughput(8):>18.1f}")
 
 # -- real execution at reduced scale (jax backend) ---------------------------
 print("\nreal-JAX reduced-scale continuous-batching serving "
-      "(plan-driven BE quantum share):")
+      "(plan-driven BE quantum share + online tidal re-planning):")
+ctrl = OnlineController(tidal_frontier(plan, 12), idle_patience=1)
 eng = ServingEngine(max_seq=20, coloring=True, plan=plan,
                     hash_model=gpu_hash_model("tesla-p40"),
-                    arena_bytes=8 << 20, slots_ls=4, slots_be=2)
+                    arena_bytes=8 << 20, slots_ls=4, slots_be=2,
+                    controller=ctrl, control_interval=2)
 eng.add_tenant(TenantSpec("ls:qwen3", "LS", nice=10_000),
                smoke_config("qwen3-1.7b").replace(
                    num_layers=2, activation_dtype="float32"))
@@ -66,3 +77,5 @@ for i in range(4):
     eng.submit("be:gemma2", rng.integers(0, 200, 6), max_new=4)
 eng.run_until_idle()
 print(json.dumps(eng.metrics(), indent=1))
+print(f"online transitions: {len(eng.transitions)} "
+      f"(pages moved: {sum(t['pages_moved'] for t in eng.transitions)})")

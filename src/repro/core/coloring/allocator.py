@@ -85,6 +85,51 @@ class ColoredArena:
             self.free[self.page_channel[pg]].append(int(pg))
 
     # ------------------------------------------------------------------
+    def resplit(self, new_channels: dict) -> dict:
+        """Move the LS/BE channel split online (the tidal re-plan's
+        bimodal-tensor switch): rebind each named allocation to its new
+        channel set and migrate its off-color pages onto free pages of that
+        set, updating the SPT in place. Pages are conserved — every move
+        pops one free page and returns one — and the *device* copy of a
+        migrated page is the caller's concern (the serving engine counts
+        moved pages; its KV pools address pages through their own tables, so
+        the arena migration is pure placement bookkeeping there).
+
+        Migration is best-effort: a page with no free on-color destination
+        stays put and keeps counting as an ``isolation_violations`` entry
+        until a later resplit (or a release) frees room — that residue is
+        the bounded snap-back debt BE pays after borrowing LS channels.
+        Multiple passes let allocations shrink into space freed by others in
+        the same resplit. Returns ``{name: pages_moved}``; names absent from
+        the arena (e.g. a KV page group freed since the plan was drawn) are
+        skipped."""
+        names = [n for n in new_channels if n in self.allocations]
+        for n in names:
+            self.allocations[n].channels = tuple(new_channels[n])
+        moved = dict.fromkeys(names, 0)
+        for _ in range(max(len(names), 1)):
+            progress = False
+            for n in names:
+                a = self.allocations[n]
+                ci = 0
+                for i in range(a.n_pages):
+                    if self.page_channel[a.spt[i]] in a.channels:
+                        continue
+                    for _ in range(len(a.channels)):
+                        c = a.channels[ci % len(a.channels)]
+                        ci += 1
+                        if self.free[c]:
+                            old = int(a.spt[i])
+                            a.spt[i] = self.free[c].pop()
+                            self.free[self.page_channel[old]].append(old)
+                            moved[n] += 1
+                            progress = True
+                            break
+            if not progress:
+                break
+        return moved
+
+    # ------------------------------------------------------------------
     def channel_histogram(self, alloc: Allocation) -> np.ndarray:
         return np.bincount(self.page_channel[alloc.spt],
                            minlength=self.num_channels)

@@ -15,6 +15,29 @@ kernel pay. The contention simulator executes the policy.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Optional
+
+
+@dataclass
+class LoadSignal:
+    """Windowed LS-load observation fed to the online controller: queue
+    depth + slot occupancy over the last control window, plus the window's
+    SLO attainment when the observer tracks one. Built by the serving
+    engine (decode-slot granularity) and the simulator (tenant
+    granularity) — the controller only sees this, never the backend."""
+    ls_queued: int = 0          # LS requests waiting for a slot
+    ls_active: int = 0          # LS requests currently holding a slot
+    ls_slots: int = 1           # max LS concurrency (normalises the load)
+    ls_slo_attainment: Optional[float] = None   # over the window, or None
+    window_s: float = 0.0
+
+    @property
+    def ls_load(self) -> float:
+        """0 when LS is fully idle, else demand over capacity in (0, 1]."""
+        demand = self.ls_queued + self.ls_active
+        if demand <= 0:
+            return 0.0
+        return min(1.0, demand / max(self.ls_slots, 1))
 
 
 @dataclass
@@ -53,6 +76,16 @@ class ComputePolicy:
             return (1.0 - self.sm_be, self.sm_be)
         return (1.0 if ls_active else 0.0, 1.0 if be_active else 0.0)
 
+    def update(self, sm_be: Optional[float] = None) -> "ComputePolicy":
+        """Quantum-boundary re-plan: mutate the BE compute quota in place.
+        Callers (the simulator's control tick, the engine's step hook) only
+        invoke this at step/tile-quantum boundaries, so an in-flight kernel
+        keeps the rate it started with until the next scheduling event —
+        the software analogue of libsmctrl remasking between launches."""
+        if sm_be is not None:
+            self.sm_be = float(min(max(sm_be, 0.0), 1.0))
+        return self
+
     def preemption_delay(self, be_running: bool) -> float:
         """Extra latency an arriving LS kernel pays before its resources are
         available."""
@@ -73,9 +106,18 @@ class ElasticMeshPartitioner:
     assignments: dict = field(default_factory=dict)
 
     def rebalance(self, ls_demand: float):
-        """ls_demand in [0,1] -> chips for LS, remainder lent to BE."""
-        ls_chips = max(self.min_ls,
-                       min(self.total_chips - 1,
-                           round(ls_demand * self.total_chips)))
+        """ls_demand in [0,1] -> chips for LS, remainder lent to BE.
+
+        Clamp order matters: the LS floor (min_ls, itself capped at the mesh
+        size) is applied *after* the keep-one-for-BE cap, so LS never drops
+        below its floor and never exceeds the mesh — the old order handed LS
+        ``min_ls`` chips even on meshes smaller than that, driving the BE
+        assignment negative. BE keeps >= 1 chip only when one can be spared
+        above the LS floor (a 1-chip mesh with min_ls >= 1 is all-LS)."""
+        floor = min(self.min_ls, self.total_chips)
+        cap = (self.total_chips - 1
+               if self.total_chips - 1 >= floor else self.total_chips)
+        want = int(round(ls_demand * self.total_chips))
+        ls_chips = max(floor, min(cap, want))
         self.assignments = {"LS": ls_chips, "BE": self.total_chips - ls_chips}
         return dict(self.assignments)

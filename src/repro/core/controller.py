@@ -1,24 +1,46 @@
-"""SGDRC controller (§5.3 + §4 offline phase):
+"""SGDRC control plane (§4/§5.3): offline plan search + online tidal re-plan.
 
-  * profiles a model's ops with the analytic cost model and marks
-    memory-bound tensors for isolation (DRAM throughput > Thres_DRAM%),
-  * grid-searches (SM_BE, Ch_BE, Thres_DRAM) maximizing BE resource grants
-    subject to LS kernel latency inflation <= 25% vs running alone (the
-    paper's constraint; their search lands at SM_BE=30, Ch_BE=1/3,
-    Thres_DRAM=40),
-  * emits a ResourcePlan consumed by the serving engine (channel splits for
-    the colored allocator, SM quota for the compute policy, nice weights for
-    the PCIe CFS).
+Two phases, mirroring the paper's software-defined split:
+
+**Offline** — :func:`grid_search` profiles a model's ops with the analytic
+cost model, marks memory-bound tensors for isolation (DRAM throughput >
+Thres_DRAM%), and grid-searches (SM_BE, Ch_BE, Thres_DRAM) maximizing BE
+resource grants subject to LS kernel latency inflation <= 25% vs running
+alone (the paper's constraint; their search lands at SM_BE=30, Ch_BE=1/3,
+Thres_DRAM=40). :func:`frontier_search` generalises the single point into a
+*frontier* of :class:`ResourcePlan` candidates, one per LS-load regime: the
+pairwise-inflation constraint is evaluated at increasing LS concurrency, so
+high-load regimes land on conservative plans and the zero-load regime is the
+full tidal-lending plan (``sm_be = 1``, BE takes every VRAM channel).
+
+**Online** — :class:`OnlineController` watches a windowed load signal from
+the serving engine or the simulator (:class:`~repro.core.compute.LoadSignal`:
+LS queue depth, slot occupancy, windowed SLO attainment) and transitions
+between frontier plans at *step boundaries* (engine quantum / simulator
+control tick — never mid-kernel):
+
+  * relaxation toward BE generosity (LS ebbing) moves one regime per
+    decision and requires ``idle_patience`` consecutive idle windows before
+    full lending — hysteresis against trace noise;
+  * tightening (LS flowing back, or windowed SLO attainment dropping under
+    ``slo_guard``) snaps straight to the regime's plan, so the LS preemption
+    delay is bounded by one control interval (the tidal snap-back).
+
+Consumers call ``decide(signal, t) -> ResourcePlan`` and apply the returned
+``sm_be`` to the compute policy and ``ch_be`` to the colored allocator / KV
+pools (``ServingEngine.apply_plan``; ``GPUSimulator(controller=...)``).
+:class:`PlanSchedule` exposes the same ``decide`` interface for replaying a
+fixed (t, plan) schedule — the static-vs-online ablation axis.
 """
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass
-from typing import List, Sequence
+from dataclasses import dataclass, replace
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .compute import ComputePolicy
+from .compute import ComputePolicy, LoadSignal
 from .costmodel import model_costs
 from .simulator import DeviceSpec, GPUSimulator, Kernel, Tenant, request_kernels
 from ..configs.base import ModelConfig
@@ -48,14 +70,18 @@ def memory_bound_ops(cfg: ModelConfig, B: int, S: int, mode: str,
 
 
 def _pair_inflation(dev: DeviceSpec, ls_k: Kernel, be_k: Kernel,
-                    sm_be: float, ch_be: float) -> float:
+                    sm_be: float, ch_be: float,
+                    ls_concurrency: int = 1) -> float:
     """LS kernel latency inflation when co-executed with a BE kernel under
-    the candidate setting (coloring on)."""
+    the candidate setting (coloring on). ``ls_concurrency`` co-runs that many
+    identical LS kernels — the load axis the frontier search sweeps."""
     solo = max(ls_k.flops / dev.peak_flops, ls_k.bytes / dev.hbm_bw)
     sim = GPUSimulator(dev, ComputePolicy(kind="sgdrc", sm_be=sm_be),
                        coloring=True, ch_be=ch_be)
-    res = sim.run([Tenant("ls", "LS", [ls_k], arrivals=[0.0]),
-                   Tenant("be", "BE", [be_k], arrivals=[0.0])], horizon=10.0)
+    tenants = [Tenant(f"ls{i}", "LS", [ls_k], arrivals=[0.0])
+               for i in range(max(ls_concurrency, 1))]
+    tenants.append(Tenant("be", "BE", [be_k], arrivals=[0.0]))
+    res = sim.run(tenants, horizon=10.0)
     lat = res.tenants[0].latencies
     return (lat[0] / solo) if lat else float("inf")
 
@@ -66,7 +92,8 @@ def grid_search(dev: DeviceSpec, ls_cfgs: Sequence[ModelConfig],
                 sm_grid=(0.1, 0.2, 0.3, 0.4, 0.5),
                 ch_grid=(1 / 6, 1 / 4, 1 / 3, 1 / 2),
                 thres_grid=(0.2, 0.4, 0.6),
-                pairs_per_model: int = 6, seed: int = 0) -> ResourcePlan:
+                pairs_per_model: int = 6, seed: int = 0,
+                ls_concurrency: int = 1) -> ResourcePlan:
     rng = np.random.default_rng(seed)
     ls_pool = [k for cfg in ls_cfgs
                for k in request_kernels(cfg, 1, 128, "prefill", dev)]
@@ -79,7 +106,7 @@ def grid_search(dev: DeviceSpec, ls_cfgs: Sequence[ModelConfig],
 
     best, best_score = None, -1.0
     for sm_be, ch_be, thres in itertools.product(sm_grid, ch_grid, thres_grid):
-        worst = max(_pair_inflation(dev, lk, bk, sm_be, ch_be)
+        worst = max(_pair_inflation(dev, lk, bk, sm_be, ch_be, ls_concurrency)
                     for lk, bk in pairs)
         if worst <= max_inflation:
             score = sm_be + ch_be + thres   # paper: maximize all three
@@ -88,7 +115,7 @@ def grid_search(dev: DeviceSpec, ls_cfgs: Sequence[ModelConfig],
                 best = (sm_be, ch_be, thres, worst)
     if best is None:   # fall back to the most conservative point
         sm_be, ch_be, thres = min(sm_grid), min(ch_grid), min(thres_grid)
-        worst = max(_pair_inflation(dev, lk, bk, sm_be, ch_be)
+        worst = max(_pair_inflation(dev, lk, bk, sm_be, ch_be, ls_concurrency)
                     for lk, bk in pairs)
         best = (sm_be, ch_be, thres, worst)
     sm_be, ch_be, thres, worst = best
@@ -98,3 +125,165 @@ def grid_search(dev: DeviceSpec, ls_cfgs: Sequence[ModelConfig],
         ls_channels=tuple(range(dev.num_channels - n_be)),
         be_channels=tuple(range(dev.num_channels - n_be, dev.num_channels)),
         max_ls_inflation=worst)
+
+
+# ---------------------------------------------------------------------------
+# plan frontier (offline phase of the online control plane)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PlanFrontier:
+    """Candidate plans indexed by LS-load regime.
+
+    ``entries`` is ``[(ls_load_level, plan)]`` sorted ascending by load;
+    entry 0 is the most BE-generous (usually the tidal-lending plan for
+    load 0) and the last entry the most conservative. ``plan_for(load)``
+    returns the most generous plan whose regime still covers ``load``.
+    """
+    entries: List[Tuple[float, ResourcePlan]]
+
+    def __post_init__(self):
+        assert self.entries, "empty frontier"
+        self.entries = sorted(self.entries, key=lambda e: e[0])
+
+    def __len__(self):
+        return len(self.entries)
+
+    def plan_for(self, load: float) -> ResourcePlan:
+        for lvl, plan in self.entries:
+            if load <= lvl + 1e-9:
+                return plan
+        return self.entries[-1][1]
+
+    def index_of(self, plan: ResourcePlan) -> int:
+        for i, (_, p) in enumerate(self.entries):
+            if p is plan:
+                return i
+        raise ValueError("plan not on this frontier")
+
+    @property
+    def plans(self) -> List[ResourcePlan]:
+        return [p for _, p in self.entries]
+
+
+def lending_plan(base: ResourcePlan,
+                 num_channels: Optional[int] = None) -> ResourcePlan:
+    """The idle-regime plan: full tidal lending. BE takes every quantum
+    (``sm_be = 1``) and every VRAM channel (``ch_be = 1``; LS keeps its
+    channel *assignment* so snap-back never migrates LS pages — BE merely
+    borrows free pages off the LS set while LS is idle). No LS kernel
+    co-runs under this plan, so the recorded inflation is 1x by definition."""
+    C = num_channels or (len(base.ls_channels) + len(base.be_channels))
+    return replace(base, sm_be=1.0, ch_be=1.0,
+                   be_channels=tuple(range(C)), max_ls_inflation=1.0)
+
+
+def tidal_frontier(plan: ResourcePlan,
+                   num_channels: Optional[int] = None) -> PlanFrontier:
+    """Minimal two-regime frontier from one offline plan: the plan itself
+    for any contended load, plus the full-lending plan for LS idle."""
+    return PlanFrontier([(0.0, lending_plan(plan, num_channels)),
+                         (1.0, plan)])
+
+
+def frontier_search(dev: DeviceSpec, ls_cfgs: Sequence[ModelConfig],
+                    be_cfgs: Sequence[ModelConfig], *,
+                    load_grid: Sequence[float] = (0.34, 0.67, 1.0),
+                    max_concurrency: int = 3,
+                    max_inflation: float = 1.25,
+                    sm_grid=(0.1, 0.2, 0.3, 0.4, 0.5),
+                    ch_grid=(1 / 6, 1 / 4, 1 / 3, 1 / 2),
+                    thres_grid=(0.2, 0.4, 0.6),
+                    pairs_per_model: int = 6, seed: int = 0) -> PlanFrontier:
+    """Offline phase of the online control plane: one grid search per LS-load
+    regime. A regime at ``load`` is evaluated with ``round(load *
+    max_concurrency)`` concurrent LS kernels in the pairwise-inflation
+    constraint, so the feasible set shrinks as load grows; the zero-load
+    regime is the analytic :func:`lending_plan` (no search needed — there is
+    nothing to protect)."""
+    entries: List[Tuple[float, ResourcePlan]] = []
+    for load in sorted(set(load_grid)):
+        assert load > 0, "load 0 is the lending plan; keep it off load_grid"
+        conc = max(1, int(round(load * max_concurrency)))
+        plan = grid_search(dev, ls_cfgs, be_cfgs,
+                           max_inflation=max_inflation, sm_grid=sm_grid,
+                           ch_grid=ch_grid, thres_grid=thres_grid,
+                           pairs_per_model=pairs_per_model, seed=seed,
+                           ls_concurrency=conc)
+        entries.append((load, plan))
+    entries.insert(0, (0.0, lending_plan(entries[-1][1], dev.num_channels)))
+    return PlanFrontier(entries)
+
+
+# ---------------------------------------------------------------------------
+# online controller
+# ---------------------------------------------------------------------------
+
+class OnlineController:
+    """Tidal plan switching from a windowed load signal (module docstring).
+
+    Stateful and backend-agnostic: the serving engine calls ``decide`` every
+    ``control_interval`` quanta, the simulator every ``control_dt`` seconds.
+    ``transitions`` records every adopted plan as ``(t, plan)``.
+    """
+
+    def __init__(self, frontier: PlanFrontier, *, idle_patience: int = 2,
+                 slo_guard: float = 0.995):
+        self.frontier = frontier
+        self.idle_patience = idle_patience
+        self.slo_guard = slo_guard
+        self.plan = frontier.entries[-1][1]   # start most conservative
+        self.transitions: List[Tuple[float, ResourcePlan]] = []
+        self._idle_windows = 0
+
+    def decide(self, sig: LoadSignal, t: float = 0.0) -> ResourcePlan:
+        load = sig.ls_load
+        if load > 0 and sig.ls_slo_attainment is not None \
+                and sig.ls_slo_attainment < self.slo_guard:
+            load = 1.0          # SLO pressure: treat as saturated
+        if load <= 0:
+            self._idle_windows += 1
+            if self._idle_windows < self.idle_patience:
+                return self.plan
+            target = self.frontier.plan_for(0.0)
+        else:
+            self._idle_windows = 0
+            target = self.frontier.plan_for(load)
+        if target is not self.plan:
+            i_cur = self.frontier.index_of(self.plan)
+            i_tgt = self.frontier.index_of(target)
+            if i_tgt < i_cur:
+                # relaxing toward BE generosity: one regime per decision
+                target = self.frontier.entries[i_cur - 1][1]
+            # tightening: jump straight to the target (bounded snap-back)
+            self.plan = target
+            self.transitions.append((t, target))
+        return self.plan
+
+
+@dataclass
+class PlanSchedule:
+    """Fixed time-indexed plan sequence with the controller ``decide``
+    interface — replays ``points = [(t_start, plan)]`` regardless of the
+    load signal (the ablation baseline for static-vs-online comparisons)."""
+    points: List[Tuple[float, ResourcePlan]]
+
+    def __post_init__(self):
+        assert self.points
+        self.points = sorted(self.points, key=lambda e: e[0])
+        self.transitions: List[Tuple[float, ResourcePlan]] = []
+        self._current = self.points[0][1]
+
+    @property
+    def plan(self) -> ResourcePlan:
+        return self.points[0][1]
+
+    def decide(self, sig: LoadSignal, t: float = 0.0) -> ResourcePlan:
+        out = self.points[0][1]
+        for t0, plan in self.points:
+            if t0 <= t + 1e-12:
+                out = plan
+        if out is not self._current:
+            self._current = out
+            self.transitions.append((t, out))
+        return out

@@ -85,14 +85,26 @@ class Tenant:
 
 
 class GPUSimulator:
+    """``controller`` makes the policy *time-varying*: any object with a
+    ``decide(LoadSignal, t) -> plan`` method (``core.controller``'s
+    OnlineController or PlanSchedule) is consulted every ``control_dt``
+    simulated seconds and its plan's ``sm_be``/``ch_be`` are adopted at that
+    boundary — never mid-event, so in-flight kernels finish their current
+    rate segment first. Event steps are capped at control boundaries, which
+    bounds the LS snap-back delay (an LS request arriving under the lending
+    plan waits at most one control tick for its resources)."""
+
     def __init__(self, dev: DeviceSpec, policy: ComputePolicy,
                  coloring: bool = False, ch_be: float = 1 / 3,
-                 spt_overhead: float = 0.007, pcie_coupled=None):
+                 spt_overhead: float = 0.007, pcie_coupled=None,
+                 controller=None, control_dt: float = 0.02):
         self.dev = dev
         self.policy = policy
         self.coloring = coloring
         self.ch_be = ch_be
         self.spt_overhead = spt_overhead
+        self.controller = controller
+        self.control_dt = control_dt
 
     # ------------------------------------------------------------------
     def _admit_orion(self, k: Kernel, n_ls_active: int) -> bool:
@@ -161,7 +173,10 @@ class GPUSimulator:
             tn.latencies, tn.completed = [], 0
 
         def eligible(tn, now):
-            return tn.suspended or (tn.queue and tn.queue[0] <= now)
+            # 1ns admission tolerance: a control-tick boundary landing an
+            # epsilon before an arrival (float accumulation) must not push
+            # the admission a whole tick out
+            return tn.suspended or (tn.queue and tn.queue[0] <= now + 1e-9)
 
         def start(tn, now, delay):
             if tn.suspended:
@@ -197,7 +212,29 @@ class GPUSimulator:
                 if tn.is_ls:
                     n_ls += 1
 
+        next_ctrl = 0.0
+
+        def control(now):
+            """Adopt the controller's plan for the current load (LS tenants
+            with due or in-flight work count toward occupancy)."""
+            nonlocal next_ctrl
+            from .compute import LoadSignal
+            n_q = sum(1 for tn in tenants if tn.is_ls
+                      and tn.active_since is None and eligible(tn, now))
+            n_a = sum(1 for tn in tenants
+                      if tn.is_ls and tn.active_since is not None)
+            sig = LoadSignal(ls_queued=n_q, ls_active=n_a,
+                             ls_slots=max(1, sum(1 for tn in tenants
+                                                 if tn.is_ls)),
+                             window_s=self.control_dt)
+            plan = self.controller.decide(sig, now)
+            self.policy.update(sm_be=plan.sm_be)
+            self.ch_be = plan.ch_be
+            next_ctrl = now + self.control_dt
+
         while t < horizon:
+            if self.controller is not None and t + 1e-12 >= next_ctrl:
+                control(t)
             admit(t)
             running = [tn for tn in tenants
                        if tn.active_since is not None and tn.active_since <= t]
@@ -218,6 +255,10 @@ class GPUSimulator:
             arr = [a for a in arr if a > 1e-12]   # only future events
             if arr:
                 dt = min(dt, min(arr))
+            if self.controller is not None:
+                # never integrate across a control boundary: the plan (and
+                # with it every co-execution rate) may change there
+                dt = min(dt, max(next_ctrl - t, 1e-9))
             dt = min(dt, horizon - t + 1e-9)
             for tn in running:
                 tn.cur_remaining -= dt / durs[tn.name]

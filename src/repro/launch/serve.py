@@ -36,19 +36,40 @@ def main():
                     help="ragged Pallas flash-decode (interpret off-TPU)")
     ap.add_argument("--grid-search", action="store_true",
                     help="derive a ResourcePlan offline and thread it in")
+    ap.add_argument("--online", action="store_true",
+                    help="online control plane: grid-search a plan frontier "
+                         "and attach an OnlineController (tidal sm_be/ch_be "
+                         "re-planning at step boundaries; implies planning)")
+    ap.add_argument("--control-interval", type=int, default=4,
+                    help="quanta between control ticks (jax backend)")
     ap.add_argument("--gpu", default="tesla-p40",
                     help="hash-model / device model for coloring and sim")
     args = ap.parse_args()
 
     from ..configs import get_config, smoke_config
     from ..core.coloring import gpu_hash_model
-    from ..core.controller import grid_search
+    from ..core.controller import (OnlineController, frontier_search,
+                                   grid_search)
     from ..core.simulator import GPU_DEVICES
     from ..core.tenancy import TenantSpec
     from ..serving import ServingEngine
 
-    plan = None
-    if args.grid_search:
+    plan, ctrl = None, None
+    if args.online:
+        dev = GPU_DEVICES[args.gpu]
+        frontier = frontier_search(dev,
+                                   [smoke_config(n) for n in args.ls],
+                                   [smoke_config(n) for n in args.be],
+                                   load_grid=(0.5, 1.0), pairs_per_model=1,
+                                   sm_grid=(0.2, 0.3, 0.4),
+                                   ch_grid=(1 / 4, 1 / 2),
+                                   thres_grid=(0.4,))
+        ctrl = OnlineController(frontier)
+        plan = ctrl.plan       # starting point = most conservative regime
+        print("frontier: " + "; ".join(
+            f"load<={lvl:.2f}: SM_BE={p.sm_be:.2f} Ch_BE={p.ch_be:.2f}"
+            for lvl, p in frontier.entries))
+    elif args.grid_search:
         dev = GPU_DEVICES[args.gpu]
         plan = grid_search(dev,
                            [smoke_config(n) for n in args.ls],
@@ -64,6 +85,7 @@ def main():
         paged=args.paged, page_size=args.page_size, use_flash=args.use_flash,
         slots_ls=args.slots, slots_be=args.slots, device=args.gpu
         if args.gpu in GPU_DEVICES else "tpu-v5e",
+        controller=ctrl, control_interval=args.control_interval,
         hash_model=gpu_hash_model(args.gpu)
         if args.coloring and args.backend == "jax" else None)
     rng = np.random.default_rng(0)

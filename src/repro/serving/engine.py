@@ -34,6 +34,21 @@ ColoredArena channel split (and the simulator's hard bandwidth split), and
 ``metrics()`` reports per-class SLO attainment / throughput so the plan's
 effect is observable.
 
+**Online control plane**: pass ``controller=`` (an
+:class:`~repro.core.controller.OnlineController` over a plan frontier, or a
+:class:`~repro.core.controller.PlanSchedule`) and the plan becomes
+*time-varying*. On the JAX backend the engine builds a
+:class:`~repro.core.compute.LoadSignal` from LS queue depth, slot occupancy
+and windowed SLO attainment every ``control_interval`` quanta, and adopts
+the controller's plan at the step boundary via :meth:`apply_plan` — new
+``sm_be`` takes effect at the next quantum pick; a ``ch_be`` move resplits
+the ColoredArena (migrating off-color pages) and recolors every tenant's KV
+page pool. LS work arriving while the full-lending plan is active triggers
+an immediate out-of-band control tick, so the LS preemption delay is
+bounded by one engine quantum. On the sim backend the controller is handed
+to ``GPUSimulator`` and consulted every ``control_dt`` simulated seconds.
+``transitions`` records every adopted plan with the pages migrated.
+
 Scheduling invariants:
   * LS quanta strictly precede BE quanta whenever no plan grants BE a share,
   * per-tenant KV caches are bump-allocated from a ColoredArena when coloring
@@ -156,12 +171,18 @@ class _JaxBackend:
         # the previous cache is dead after each decode step — donate it so
         # the one-token append is in-place instead of a full pool copy
         if eng.paged:
-            chans = None
+            chans = cap = None
             if eng.arena is not None:
                 chans = eng.ls_ch if rt.spec.is_ls else eng.be_ch
+                if eng.controller is not None:
+                    # tidal pools: size the device pool for the lending
+                    # maximum (every channel); live admission still runs
+                    # against the class's current colored bytes
+                    cap = tuple(range(eng.arena.num_channels))
             rt.kv = PagedKVCache(cfg, rt.n_slots, eng.max_seq, eng.page_size,
                                  n_pages=eng.kv_pages, arena=eng.arena,
-                                 channels=chans, name=rt.spec.name)
+                                 channels=chans, name=rt.spec.name,
+                                 cap_channels=cap)
             rt.cache = rt.kv.init_pools()
             rt.decode_fn = jax.jit(_decode_paged, donate_argnums=(2,))
         else:
@@ -361,7 +382,8 @@ class _SimBackend:
         sm_be = plan.sm_be if plan is not None else ComputePolicy().sm_be
         policy = ComputePolicy(kind=self.policy_kind, sm_be=sm_be)
         sim = GPUSimulator(self.dev, policy, coloring=eng.coloring,
-                           ch_be=eng.ch_be)
+                           ch_be=eng.ch_be, controller=eng.controller,
+                           control_dt=eng.control_dt)
         res = sim.run([tn for _, _, tn in built], horizon)
         total = 0
         for rt, pending, tn in built:
@@ -410,7 +432,9 @@ class ServingEngine:
                  hash_model=None, now_fn=None, slots_ls: int = 4,
                  slots_be: int = 4, paged: bool = False, page_size: int = 8,
                  kv_pages: Optional[int] = None, use_flash: bool = False,
-                 device="tpu-v5e", policy: str = "sgdrc"):
+                 device="tpu-v5e", policy: str = "sgdrc",
+                 controller=None, control_interval: int = 4,
+                 control_dt: float = 0.02):
         self.max_seq = max_seq
         self.paged = paged
         self.page_size = page_size
@@ -427,6 +451,16 @@ class ServingEngine:
         # work is pending (None/0 -> strict LS priority, the seed behaviour)
         self.sm_be = plan.sm_be if plan is not None else 0.0
         self._be_credit = 0.0
+        # online control plane (module docstring): a decide()-bearing
+        # controller makes the plan time-varying at step boundaries
+        self.controller = controller
+        self.control_interval = max(int(control_interval), 1)
+        self.control_dt = control_dt
+        self.transitions: List[dict] = []
+        self._applied_plan = None
+        self._last_ctl_step: Optional[int] = None
+        self._ctl_done_idx: Dict[str, int] = {}
+        self._last_window = None
         self.slots_ls, self.slots_be = slots_ls, slots_be
         self.events: List[tuple] = []   # (quantum_idx, tenant, class)
         self._step_idx = 0
@@ -506,6 +540,91 @@ class ServingEngine:
         rt.queue.append(req)
         return req
 
+    # -- online control plane ------------------------------------------
+    def _load_signal(self):
+        """LoadSignal over the window since the last control tick."""
+        from ..core.compute import LoadSignal
+        q = a = slots = slo_ok = slo_n = 0
+        for name, rt in self.tenants.items():
+            if not rt.spec.is_ls:
+                continue
+            q += len(rt.queue)
+            a += sum(r is not None for r in rt.active)
+            slots += rt.n_slots
+            i0 = self._ctl_done_idx.get(name, 0)
+            self._ctl_done_idx[name] = len(rt.done)
+            if rt.spec.slo_ms is not None:
+                for r in rt.done[i0:]:
+                    if r.failed or r.latency is None:
+                        continue
+                    slo_n += 1
+                    slo_ok += r.latency * 1e3 <= rt.spec.slo_ms
+        return LoadSignal(ls_queued=q, ls_active=a, ls_slots=max(slots, 1),
+                          ls_slo_attainment=(slo_ok / slo_n) if slo_n
+                          else None)
+
+    def _maybe_control(self):
+        """Consult the controller at the quantum boundary: every
+        ``control_interval`` quanta, plus out-of-band whenever LS work shows
+        up under a full-lending plan (the bounded tidal snap-back)."""
+        due = (self._last_ctl_step is None
+               or self._step_idx - self._last_ctl_step
+               >= self.control_interval)
+        if not due and self.sm_be >= 1.0:
+            due = any(rt.spec.is_ls and rt.has_work()
+                      for rt in self.tenants.values())
+        if not due:
+            return
+        self._last_ctl_step = self._step_idx
+        plan = self.controller.decide(self._load_signal(),
+                                      t=float(self._step_idx))
+        if plan is not self._applied_plan:
+            self.apply_plan(plan)
+        elif self.arena is not None:
+            # drain leftover off-color pages from an earlier partial
+            # migration (BE groups still borrowing LS channels)
+            debt = {n: a.channels for n, a in self.arena.allocations.items()
+                    if self.arena.isolation_violations(a)}
+            if debt:
+                self.arena.resplit(debt)
+
+    def _channel_sets(self, ch_be: float):
+        """Engine-local channel sets for a plan's ``ch_be`` (the plan's own
+        sets were drawn for the *controller's* DeviceSpec, whose channel
+        count may differ from the hash model's). ``ch_be >= 1`` is the
+        lending plan: BE may borrow every channel while LS keeps its
+        assignment, so snap-back never migrates LS pages."""
+        C = self.arena.num_channels
+        if ch_be >= 1.0 - 1e-9:
+            return self.ls_ch, tuple(range(C))
+        return split_channels(C, ch_be)
+
+    def apply_plan(self, plan: ResourcePlan):
+        """Adopt a ResourcePlan at a step boundary: the BE quantum share
+        moves immediately; a ``ch_be`` move resplits the arena (off-color
+        pages migrate to the new sets) and recolors every KV page pool so
+        future page groups land on the new split. Device pools and page
+        tables are untouched — a mid-run plan change never alters tokens."""
+        prev = self._applied_plan
+        self.sm_be = plan.sm_be
+        moved = 0
+        if self.arena is not None and (prev is None
+                                       or plan.ch_be != prev.ch_be):
+            new_ls, new_be = self._channel_sets(plan.ch_be)
+            mapping = {}
+            for rt in self.tenants.values():
+                chans = new_ls if rt.spec.is_ls else new_be
+                if rt.kv is not None:
+                    mapping.update(rt.kv.recolor(chans))
+                elif rt.alloc_name is not None:
+                    mapping[rt.alloc_name] = chans
+            self.ls_ch, self.be_ch = new_ls, new_be
+            moved = sum(self.arena.resplit(mapping).values())
+        self._applied_plan = plan
+        self.transitions.append({"step": self._step_idx,
+                                 "sm_be": plan.sm_be, "ch_be": plan.ch_be,
+                                 "pages_moved": int(moved)})
+
     # ------------------------------------------------------------------
     def _pick(self, rts: List[_TenantRT]) -> List[_TenantRT]:
         """Earliest outstanding request first (FIFO across tenants)."""
@@ -519,7 +638,10 @@ class ServingEngine:
         """One engine quantum (JAX backend): choose a tenant class via the
         plan's BE quantum share, then run one batched prefill-or-decode
         quantum for one tenant of that class. LS strictly preempts BE at
-        this boundary when no plan grants BE a share."""
+        this boundary when no plan grants BE a share. With an online
+        controller attached this boundary is also where re-plans land."""
+        if self.controller is not None and self.backend_name == "jax":
+            self._maybe_control()
         ls = [rt for rt in self.tenants.values()
               if rt.spec.is_ls and rt.has_work()]
         be = [rt for rt in self.tenants.values()
@@ -550,17 +672,47 @@ class ServingEngine:
                 return True
         return False
 
+    def _class_counts(self):
+        c = {"LS": [0, 0], "BE": [0, 0]}       # [completed, tokens]
+        for rt in self.tenants.values():
+            served = [r for r in rt.done if not r.failed]
+            c[rt.spec.priority][0] += len(served) + rt.sim_completed
+            c[rt.spec.priority][1] += sum(len(r.output or ()) for r in served)
+        return c
+
     def run_until_idle(self, max_steps: int = 100_000, horizon=None) -> int:
         """JAX backend: run quanta until no tenant has work (returns #quanta).
         Sim backend: build tenants from the submitted stream, run the
         simulator over ``horizon`` and write completions back (returns
-        #completed requests; the raw SimResult lands in ``self.sim_result``)."""
+        #completed requests; the raw SimResult lands in ``self.sim_result``).
+
+        Each call is one serving *window*: per-window rates land in
+        ``metrics()['_window']``, next to the cumulative rollup (whose
+        denominator spans every window — across repeated drains the
+        cumulative ``throughput_rps`` mixes windows, so window rates are
+        the honest per-run signal)."""
         t0 = self.clock()
+        before = self._class_counts()
         n = self.backend.run_until_idle(max_steps=max_steps, horizon=horizon)
         if self.backend_name == "jax":
             # accumulate across calls: metrics() divides cumulative
             # completions by cumulative serving time
-            self._elapsed = (self._elapsed or 0.0) + (self.clock() - t0)
+            win = self.clock() - t0
+            self._elapsed = (self._elapsed or 0.0) + win
+        else:
+            # this drain's virtual horizon (cumulative _elapsed keeps the
+            # widest-horizon semantics the sim backend always had)
+            win = self.sim_result.horizon if self.sim_result else 0.0
+        after = self._class_counts()
+        self._last_window = {"elapsed_s": win}
+        for pri in ("LS", "BE"):
+            done = after[pri][0] - before[pri][0]
+            toks = after[pri][1] - before[pri][1]
+            self._last_window[pri] = {
+                "completed": done,
+                "throughput_rps": done / win if win > 0 else None,
+                "tokens_per_s": toks / win if win > 0 else None,
+            }
         return n
 
     # ------------------------------------------------------------------
@@ -606,10 +758,21 @@ class ServingEngine:
                 "slo_attainment": (c["slo_ok"] / c["slo_n"]
                                    if c["slo_n"] else None),
             }
+        if self._last_window is not None:
+            out["_window"] = self._last_window
         if self.plan is not None:
             out["_plan"] = {"sm_be": self.plan.sm_be,
                             "ch_be": self.plan.ch_be,
                             "thres_dram": self.plan.thres_dram}
+        applied = self._applied_plan
+        if applied is not None or self.transitions:
+            out["_online"] = {
+                "sm_be": applied.sm_be if applied else None,
+                "ch_be": applied.ch_be if applied else None,
+                "transitions": len(self.transitions),
+                "pages_moved": sum(t["pages_moved"]
+                                   for t in self.transitions),
+            }
         if self.arena is not None:
             out["_coloring"] = {
                 name: {"violations": self.arena.isolation_violations(a),

@@ -72,12 +72,19 @@ class PagedKVCache:
       arena       optional ColoredArena; page groups become named colored
                   allocations (alloc at admit / release at evict)
       channels    the tenant class's channel set within the arena
+      cap_channels  channel set used only for the construction-time pool cap
+                  (default: ``channels``). An online controller passes the
+                  full channel range here so the device pool is sized for
+                  the tidal maximum — admission still re-checks the *live*
+                  colored bytes of ``channels``, which :meth:`recolor`
+                  moves at plan transitions.
     """
 
     def __init__(self, cfg: ModelConfig, n_slots: int, max_seq: int,
                  page_size: int, *, n_pages: Optional[int] = None,
                  dtype=None, arena: Optional[ColoredArena] = None,
-                 channels: Optional[Sequence[int]] = None, name: str = "kv"):
+                 channels: Optional[Sequence[int]] = None, name: str = "kv",
+                 cap_channels: Optional[Sequence[int]] = None):
         assert tf.pageable(cfg), f"{cfg.name} is not pageable"
         self.cfg = cfg
         self.n_slots = n_slots
@@ -89,7 +96,8 @@ class PagedKVCache:
             kv_bytes_per_token(cfg, jnp.dtype(dtype).itemsize) * page_size)
         self.arena, self.channels, self.name = arena, channels, name
         if arena is not None:
-            cap = (arena.free_pages(channels) * arena.granularity
+            cap_src = channels if cap_channels is None else cap_channels
+            cap = (arena.free_pages(cap_src) * arena.granularity
                    // max(self.bytes_per_page, 1))
             n_pages = min(n_pages, cap) if n_pages else cap
         elif n_pages is None:
@@ -158,6 +166,20 @@ class PagedKVCache:
         """Return every live page group to the arena (tenant teardown)."""
         for slot in range(self.n_slots):
             self.free_slot(slot)
+
+    def recolor(self, new_channels: Sequence[int]) -> dict:
+        """Bimodal-tensor switch: rebind future page-group allocations to
+        ``new_channels`` and return the ``{arena_name: new_channels}``
+        mapping for the *live* groups, for the caller to feed into one
+        :meth:`~repro.core.coloring.allocator.ColoredArena.resplit` batch
+        (the engine merges every tenant's mapping into a single arena
+        migration per plan transition). Device pools and page tables are
+        untouched — tokens are unaffected by a mid-run recolor."""
+        self.channels = tuple(new_channels)
+        if self.arena is None:
+            return {}
+        return {f"{self.name}:s{s}": self.channels
+                for s in range(self.n_slots) if self.slot_pages[s]}
 
     # -- device-side structures ----------------------------------------
     def init_pools(self, dtype=None):

@@ -99,6 +99,63 @@ def test_allocator_oom_on_exhausted_colors():
         arena.alloc("big", 10 << 20, be)
 
 
+def _all_pages_accounted(arena):
+    """Every arena page is exactly once in a free list or an SPT."""
+    free = [p for lst in arena.free for p in lst]
+    held = [int(p) for a in arena.allocations.values() for p in a.spt]
+    assert len(free) + len(held) == len(arena.page_channel)
+    assert len(set(free) | set(held)) == len(arena.page_channel)
+
+
+def test_resplit_migrates_and_conserves_pages():
+    arena, hm = _arena()
+    ls, be = split_channels(hm.num_channels, 1 / 4)
+    a = arena.alloc("ls_w", 512 * 1024, ls)
+    b = arena.alloc("be_w", 256 * 1024, be)
+    ls2, be2 = split_channels(hm.num_channels, 1 / 2)
+    moved = arena.resplit({"ls_w": ls2, "be_w": be2})
+    # BE widened onto former-LS channels; LS vacated them
+    assert moved["be_w"] == 0 or arena.isolation_violations(b) == 0
+    assert arena.isolation_violations(a) == 0
+    assert arena.isolation_violations(b) == 0
+    assert a.channels == ls2 and b.channels == be2
+    _all_pages_accounted(arena)
+
+
+def test_resplit_repeated_keeps_ls_clean():
+    """The tidal cycle: repeated ch_be moves (including full lending, where
+    BE's set covers LS's) never leave an LS page off-color or leak pages."""
+    arena, hm = _arena()
+    every = tuple(range(hm.num_channels))
+    ls, be = split_channels(hm.num_channels, 1 / 3)
+    a = arena.alloc("ls_w", 768 * 1024, ls)
+    b = arena.alloc("be_w", 512 * 1024, be)
+    for ch_be in (1 / 2, 1 / 6, None, 1 / 4, None, 1 / 3):
+        if ch_be is None:      # lending: BE borrows everything
+            arena.resplit({"be_w": every})
+        else:
+            ls_c, be_c = split_channels(hm.num_channels, ch_be)
+            arena.resplit({"ls_w": ls_c, "be_w": be_c})
+        assert arena.isolation_violations(a) == 0
+        _all_pages_accounted(arena)
+    assert arena.isolation_violations(b) == 0
+
+
+def test_resplit_best_effort_and_unknown_names():
+    """Off-color pages with no free destination stay put (counted as
+    violations, to be drained later) instead of raising; names not in the
+    arena are skipped."""
+    arena, hm = _arena(mb=1)
+    ls, be = split_channels(hm.num_channels, 1 / 3)
+    # fill LS channels almost completely, then try to squeeze BE into them
+    a = arena.alloc("ls_w", arena.free_pages(ls) * hm.granularity, ls)
+    b = arena.alloc("be_w", 128 * 1024, be)
+    moved = arena.resplit({"be_w": ls, "ghost": be})
+    assert "ghost" not in moved
+    assert arena.isolation_violations(b) == b.n_pages - moved["be_w"]
+    _all_pages_accounted(arena)
+
+
 @given(frac=st.floats(0.05, 0.95))
 @settings(max_examples=20, deadline=None)
 def test_split_channels_property(frac):

@@ -28,6 +28,18 @@ def test_multistream_sentinel():
     assert p.alloc(False, True) == (0.0, 1.0)
 
 
+def test_policy_update_at_quantum_boundary():
+    p = ComputePolicy(kind="sgdrc", sm_be=0.3)
+    assert p.update(sm_be=0.7) is p
+    assert p.alloc(True, True) == pytest.approx((0.3, 0.7))
+    p.update(sm_be=1.5)                      # clamped into [0, 1]
+    assert p.sm_be == 1.0
+    p.update(sm_be=-0.1)
+    assert p.sm_be == 0.0
+    p.update()                               # no-op keeps the quota
+    assert p.sm_be == 0.0
+
+
 def test_elastic_mesh_partitioner():
     em = ElasticMeshPartitioner(total_chips=256, min_ls=8)
     a = em.rebalance(0.9)
@@ -37,3 +49,27 @@ def test_elastic_mesh_partitioner():
     assert b["LS"] == 8                      # floor respected
     c = em.rebalance(1.0)
     assert c["BE"] >= 1                      # BE never starved of all chips
+
+
+def test_elastic_mesh_partitioner_single_chip():
+    """total_chips=1: the LS floor wins when set, and BE never goes
+    negative; with no LS floor the keep-one-for-BE rule takes the chip."""
+    em = ElasticMeshPartitioner(total_chips=1, min_ls=1)
+    for demand in (0.0, 0.5, 1.0):
+        a = em.rebalance(demand)
+        assert a == {"LS": 1, "BE": 0}
+    em0 = ElasticMeshPartitioner(total_chips=1, min_ls=0)
+    for demand in (0.0, 1.0):
+        a = em0.rebalance(demand)
+        assert a["LS"] + a["BE"] == 1 and a["BE"] >= 0 and a["LS"] >= 0
+
+
+def test_elastic_mesh_partitioner_floor_exceeds_mesh():
+    """min_ls larger than the mesh used to hand LS phantom chips and BE a
+    negative assignment; the floor is now capped at the mesh size."""
+    em = ElasticMeshPartitioner(total_chips=4, min_ls=8)
+    a = em.rebalance(0.0)
+    assert a == {"LS": 4, "BE": 0}
+    # and demand never pushes past the mesh either
+    b = em.rebalance(1.0)
+    assert b["LS"] + b["BE"] == 4 and b["BE"] >= 0

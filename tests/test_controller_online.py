@@ -1,0 +1,265 @@
+"""Online control plane: plan frontier, tidal OnlineController semantics,
+time-varying policies in the simulator, and the serving engine's
+step-boundary re-planning (lending, snap-back, resplit, token stability)."""
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core.compute import ComputePolicy, LoadSignal
+from repro.core.controller import (OnlineController, PlanFrontier,
+                                   PlanSchedule, ResourcePlan,
+                                   frontier_search, lending_plan,
+                                   tidal_frontier)
+from repro.core.simulator import GPU_DEVICES, GPUSimulator, Kernel, Tenant
+from repro.core.tenancy import TenantSpec
+from repro.serving import ServingEngine
+from repro.serving.kv_cache import kv_bytes_per_token
+
+
+def _plan(sm_be=0.3, ch_be=0.25, C=4):
+    ls, be = tuple(range(C - 1)), (C - 1,)
+    return ResourcePlan(sm_be, ch_be, 0.4, ls, be, 1.2)
+
+
+# ---------------------------------------------------------------------------
+# frontier
+# ---------------------------------------------------------------------------
+
+def test_lending_plan_and_tidal_frontier():
+    base = _plan()
+    idle = lending_plan(base, 4)
+    assert idle.sm_be == 1.0 and idle.ch_be == 1.0
+    assert idle.be_channels == tuple(range(4))
+    assert idle.ls_channels == base.ls_channels   # LS keeps its assignment
+    f = tidal_frontier(base, 4)
+    assert f.plan_for(0.0) is f.entries[0][1]
+    assert f.plan_for(0.7) is base and f.plan_for(1.0) is base
+
+
+def test_frontier_ordering_and_lookup():
+    p0, p1, p2 = _plan(1.0, 1.0), _plan(0.4, 0.5), _plan(0.1, 0.25)
+    f = PlanFrontier([(1.0, p2), (0.0, p0), (0.5, p1)])  # unsorted input
+    assert f.plans == [p0, p1, p2]
+    assert f.plan_for(0.0) is p0
+    assert f.plan_for(0.3) is p1
+    assert f.plan_for(0.9) is p2
+    assert f.plan_for(2.0) is p2          # saturating
+    assert f.index_of(p1) == 1
+
+
+def test_frontier_search_produces_regime_plans():
+    dev = GPU_DEVICES["tesla-p40"]
+    f = frontier_search(dev, [smoke_config("qwen3-1.7b")],
+                        [smoke_config("gemma2-9b")],
+                        load_grid=(1.0,), pairs_per_model=1,
+                        sm_grid=(0.2, 0.4), ch_grid=(1 / 4,),
+                        thres_grid=(0.4,))
+    assert len(f) == 2
+    idle, busy = f.plans
+    assert idle.sm_be == 1.0 and idle.ch_be == 1.0
+    assert busy.sm_be <= 0.4 and busy.ch_be == pytest.approx(1 / 4)
+    assert idle.be_channels == tuple(range(dev.num_channels))
+
+
+# ---------------------------------------------------------------------------
+# controller semantics
+# ---------------------------------------------------------------------------
+
+def test_controller_idle_patience_then_lending():
+    ctrl = OnlineController(tidal_frontier(_plan(), 4), idle_patience=2)
+    busy = ctrl.plan
+    idle_sig = LoadSignal(ls_queued=0, ls_active=0, ls_slots=4)
+    assert ctrl.decide(idle_sig, 0.0) is busy      # patience not met yet
+    lent = ctrl.decide(idle_sig, 1.0)
+    assert lent.sm_be == 1.0 and lent.ch_be == 1.0
+    assert len(ctrl.transitions) == 1
+
+
+def test_controller_snaps_back_immediately_on_ls_arrival():
+    ctrl = OnlineController(tidal_frontier(_plan(), 4), idle_patience=2)
+    idle_sig = LoadSignal(0, 0, 4)
+    ctrl.decide(idle_sig, 0.0)
+    assert ctrl.decide(idle_sig, 1.0).sm_be == 1.0
+    # one LS arrival: straight back to the conservative plan, no hysteresis
+    back = ctrl.decide(LoadSignal(ls_queued=1, ls_active=0, ls_slots=4), 2.0)
+    assert back.sm_be == pytest.approx(0.3)
+    # and idle patience restarts from zero: one idle window is not enough
+    assert ctrl.decide(idle_sig, 3.0) is back
+
+
+def test_controller_relaxes_one_regime_per_decision():
+    p_hi, p_mid, p_idle = _plan(0.1, 0.25), _plan(0.4, 0.5), _plan(1.0, 1.0)
+    f = PlanFrontier([(0.0, p_idle), (0.5, p_mid), (1.0, p_hi)])
+    ctrl = OnlineController(f, idle_patience=1)
+    assert ctrl.plan is p_hi
+    # sustained idleness walks the frontier one regime at a time
+    assert ctrl.decide(LoadSignal(0, 0, 4), 0.0) is p_mid
+    assert ctrl.decide(LoadSignal(0, 0, 4), 1.0) is p_idle
+
+
+def test_controller_slo_guard_escalates():
+    p_hi, p_mid, p_idle = _plan(0.1, 0.25), _plan(0.4, 0.5), _plan(1.0, 1.0)
+    f = PlanFrontier([(0.0, p_idle), (0.5, p_mid), (1.0, p_hi)])
+    ctrl = OnlineController(f, idle_patience=1, slo_guard=0.99)
+    ctrl.plan = p_mid
+    # light load but failing SLO -> most conservative plan
+    sig = LoadSignal(ls_queued=1, ls_active=0, ls_slots=8,
+                     ls_slo_attainment=0.5)
+    assert ctrl.decide(sig, 0.0) is p_hi
+
+
+def test_plan_schedule_replays_points():
+    p0, p1 = _plan(0.3), _plan(1.0, 1.0)
+    sched = PlanSchedule([(2.0, p1), (0.0, p0)])
+    sig = LoadSignal(5, 5, 5)     # ignored by schedules
+    assert sched.decide(sig, 0.0) is p0
+    assert sched.decide(sig, 1.99) is p0
+    assert sched.decide(sig, 2.0) is p1
+    assert sched.decide(sig, 10.0) is p1
+    # plan switches are recorded like the online controller's
+    assert sched.transitions == [(2.0, p1)]
+
+
+# ---------------------------------------------------------------------------
+# simulator: time-varying policy
+# ---------------------------------------------------------------------------
+
+def _sim_tenants():
+    # LS burst in [0, 0.5]; memory-bound closed-loop BE
+    arr = list(np.arange(0.0, 0.5, 0.02))
+    return [Tenant("ls0", "LS", [Kernel(5e9, 2e8, False)], arrivals=arr),
+            Tenant("be0", "BE", [Kernel(1e10, 4e9, True)] * 4,
+                   closed_loop=True)]
+
+
+def _run_sim(controller):
+    dev = GPU_DEVICES["tesla-v100"]
+    sim = GPUSimulator(dev, ComputePolicy("sgdrc", sm_be=0.3),
+                       coloring=True, ch_be=1 / 3, controller=controller,
+                       control_dt=0.005)
+    return sim.run(_sim_tenants(), 2.0)
+
+
+def test_sim_time_varying_schedule_reclaims_trough_bandwidth():
+    static = _run_sim(None)
+    plan = _plan(0.3, 1 / 3)
+    sched = PlanSchedule([(0.0, plan), (0.6, lending_plan(plan, 32))])
+    dynamic = _run_sim(sched)
+    # LS finished before the switch: identical burst-phase behaviour
+    assert dynamic.tenants[0].completed == static.tenants[0].completed
+    assert dynamic.tenants[0].latencies == pytest.approx(
+        static.tenants[0].latencies)
+    # BE rides the full bandwidth after 0.6s instead of ch_be of it
+    assert dynamic.tenants[1].completed > 1.2 * static.tenants[1].completed
+
+
+def test_sim_online_controller_beats_static_at_equal_slo():
+    static = _run_sim(None)
+    ctrl = OnlineController(tidal_frontier(_plan(0.3, 1 / 3), 32),
+                            idle_patience=2)
+    online = _run_sim(ctrl)
+    assert len(ctrl.transitions) >= 1
+    assert online.tenants[1].completed > 1.2 * static.tenants[1].completed
+    # bounded snap-back: LS p99 inflates by at most ~one control tick
+    assert online.ls_p99() <= static.ls_p99() + 2 * 0.005 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# serving engine: step-boundary re-planning on the JAX backend
+# ---------------------------------------------------------------------------
+
+def _paged_engine(cfg, *, controller=None, rows=10, plan=None,
+                  slots_be=6, control_interval=2):
+    from conftest import FakeHashModel
+    max_seq = 24
+    plan = plan or _plan()
+    return ServingEngine(
+        max_seq=max_seq, coloring=True, plan=plan, paged=True, page_size=4,
+        hash_model=FakeHashModel(),
+        arena_bytes=rows * kv_bytes_per_token(cfg) * max_seq,
+        slots_ls=4, slots_be=slots_be, controller=controller,
+        control_interval=control_interval)
+
+
+def test_engine_online_lends_and_snaps_back(tiny_cfg, rng):
+    ctrl = OnlineController(tidal_frontier(_plan(), 4), idle_patience=1)
+    eng = _paged_engine(tiny_cfg, controller=ctrl)
+    eng.add_tenant(TenantSpec("ls0", "LS", slo_ms=300_000.0), tiny_cfg)
+    eng.add_tenant(TenantSpec("be0", "BE"), tiny_cfg)
+    for _ in range(2):
+        eng.submit("ls0", rng.integers(0, 100, 6), max_new=3)
+    for _ in range(6):
+        eng.submit("be0", rng.integers(0, 100, 6), max_new=10)
+    # run to idle, then inject a second LS tide against the lending plan
+    eng.run_until_idle()
+    assert any(t["sm_be"] == 1.0 for t in eng.transitions), "never lent"
+    assert eng.sm_be == 1.0
+    eng.submit("ls0", rng.integers(0, 100, 6), max_new=3)
+    eng.step()    # out-of-band control tick precedes the quantum
+    assert eng.sm_be < 1.0, "no snap-back on LS arrival"
+    snaps = [t for t in eng.transitions if t["sm_be"] < 1.0]
+    assert snaps
+    eng.run_until_idle()
+    m = eng.metrics()
+    assert m["ls0"]["completed"] == 3 and m["be0"]["completed"] == 6
+    assert m["_class"]["LS"]["slo_attainment"] == 1.0
+    assert m["_online"]["transitions"] == len(eng.transitions)
+    # LS allocations never migrate: zero violations across the tide
+    for name, a in eng.arena.allocations.items():
+        if name.startswith("ls0"):
+            assert eng.arena.isolation_violations(a) == 0, name
+
+
+def test_engine_lending_widens_be_admission(tiny_cfg, rng):
+    """Static BE admission is capped by its channel set's colored bytes;
+    the tidal resplit lets BE borrow idle LS channels and batch wider."""
+    results = {}
+    for mode in ("static", "online"):
+        ctrl = (OnlineController(tidal_frontier(_plan(), 4),
+                                 idle_patience=1)
+                if mode == "online" else None)
+        eng = _paged_engine(tiny_cfg, controller=ctrl, rows=10)
+        eng.add_tenant(TenantSpec("be0", "BE"), tiny_cfg)
+        r = np.random.default_rng(0)
+        for _ in range(6):
+            eng.submit("be0", r.integers(0, 100, 6), max_new=8)
+        quanta = eng.run_until_idle()
+        m = eng.metrics()
+        assert m["be0"]["completed"] == 6
+        results[mode] = (m["be0"]["peak_active"], quanta)
+    # 10-row arena, 1-of-4 BE channels -> ~2 static rows; lending opens it up
+    assert results["static"][0] <= 3
+    assert results["online"][0] > results["static"][0]
+    assert results["online"][1] < results["static"][1]   # fewer quanta
+
+
+def test_engine_tokens_bit_equal_across_midrun_resplit(tiny_cfg, rng):
+    """The bimodal-tensor switch is placement bookkeeping only: a mid-run
+    ch_be move (arena resplit + KV recolor) must not change any token."""
+    prompts = [rng.integers(0, 100, 6) for _ in range(6)]
+
+    def run(resplit_at):
+        eng = _paged_engine(tiny_cfg, rows=24, plan=_plan(0.3, 0.25))
+        eng.add_tenant(TenantSpec("ls0", "LS"), tiny_cfg)
+        eng.add_tenant(TenantSpec("be0", "BE"), tiny_cfg)
+        reqs = []
+        for i, p in enumerate(prompts):
+            reqs.append(eng.submit("ls0" if i % 3 == 0 else "be0", p,
+                                   max_new=6))
+        steps = 0
+        while eng.step():
+            steps += 1
+            if steps == resplit_at:
+                eng.apply_plan(_plan(0.3, 0.5))   # same sm_be: pure ch move
+        return eng, [r.output for r in reqs]
+
+    eng_a, out_a = run(resplit_at=None)
+    eng_b, out_b = run(resplit_at=3)
+    assert eng_b.transitions and eng_b.transitions[0]["ch_be"] == 0.5
+    for a, b in zip(out_a, out_b):
+        assert a == b
+    # and the resplit left every allocation on its (new) color
+    for name, a in eng_b.arena.allocations.items():
+        assert eng_b.arena.isolation_violations(a) == 0, name

@@ -38,6 +38,30 @@ def test_coloring_zero_violations(tiny_cfg, rng, fake_hash_model):
     assert m["ls0"]["completed"] == 1
 
 
+def test_window_metrics_across_repeated_runs(tiny_cfg, rng):
+    """Each run_until_idle() is one serving window: metrics()['_window']
+    reports that window's rates, so repeated drains don't smear the
+    cumulative throughput denominator over idle gaps between runs."""
+    eng = ServingEngine(max_seq=24)
+    eng.add_tenant(TenantSpec("ls0", "LS"), tiny_cfg)
+    for _ in range(3):
+        eng.submit("ls0", rng.integers(0, 100, 4), max_new=3)
+    eng.run_until_idle()
+    w1 = eng.metrics()["_window"]
+    assert w1["LS"]["completed"] == 3
+    assert w1["LS"]["throughput_rps"] > 0
+    # second window: only the new completions count toward it
+    for _ in range(2):
+        eng.submit("ls0", rng.integers(0, 100, 4), max_new=3)
+    eng.run_until_idle()
+    m = eng.metrics()
+    assert m["_window"]["LS"]["completed"] == 2
+    assert m["_window"]["BE"]["completed"] == 0
+    assert m["_window"]["elapsed_s"] > 0
+    assert m["_class"]["LS"]["completed"] == 5       # cumulative unchanged
+    assert m["ls0"]["completed"] == 5
+
+
 def test_class_metrics_and_slots(tiny_cfg, rng):
     """Continuous batching: more requests than slots complete, and the
     per-class rollup reports throughput + latency percentiles."""
