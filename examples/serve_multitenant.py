@@ -58,12 +58,16 @@ for policy, coloring, online in [("temporal", False, False),
           f"{res.be_throughput(8):>18.1f}")
 
 # -- real execution at reduced scale (jax backend) ---------------------------
+# paged colored KV + radix-tree prefix cache: the repeated system prompt is
+# prefilled once and shared copy-on-write into later slots' page tables
 print("\nreal-JAX reduced-scale continuous-batching serving "
-      "(plan-driven BE quantum share + online tidal re-planning):")
+      "(plan-driven BE quantum share + online tidal re-planning "
+      "+ prefix-cache page sharing):")
 ctrl = OnlineController(tidal_frontier(plan, 12), idle_patience=1)
 eng = ServingEngine(max_seq=20, coloring=True, plan=plan,
                     hash_model=gpu_hash_model("tesla-p40"),
                     arena_bytes=8 << 20, slots_ls=4, slots_be=2,
+                    paged=True, page_size=4, prefix_cache=True,
                     controller=ctrl, control_interval=2)
 eng.add_tenant(TenantSpec("ls:qwen3", "LS", nice=10_000),
                smoke_config("qwen3-1.7b").replace(
@@ -72,10 +76,16 @@ eng.add_tenant(TenantSpec("be:gemma2", "BE", nice=1),
                smoke_config("gemma2-9b").replace(
                    num_layers=2, activation_dtype="float32"))
 rng = np.random.default_rng(0)
+system_prompt = rng.integers(0, 200, 4)
 for i in range(4):
-    eng.submit("ls:qwen3", rng.integers(0, 200, 6), max_new=4)
-    eng.submit("be:gemma2", rng.integers(0, 200, 6), max_new=4)
-eng.run_until_idle()
+    eng.submit("ls:qwen3",
+               np.concatenate([system_prompt, rng.integers(0, 200, 2)]),
+               max_new=4)
+    eng.submit("be:gemma2",
+               np.concatenate([system_prompt, rng.integers(0, 200, 2)]),
+               max_new=4)
+    eng.run_until_idle()
 print(json.dumps(eng.metrics(), indent=1))
 print(f"online transitions: {len(eng.transitions)} "
-      f"(pages moved: {sum(t['pages_moved'] for t in eng.transitions)})")
+      f"(pages moved: {sum(t['pages_moved'] for t in eng.transitions)}, "
+      f"migrated bytes: {eng.migrated_bytes})")

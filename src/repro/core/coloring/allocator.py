@@ -51,6 +51,7 @@ class ColoredArena:
         self.free: list[list[int]] = [
             list(np.nonzero(chan == c)[0][::-1]) for c in range(num_channels)]
         self.allocations: dict[str, Allocation] = {}
+        self.last_resplit = {"pages": 0, "bytes": 0}
 
     # ------------------------------------------------------------------
     def free_pages(self, channels: Sequence[int]) -> int:
@@ -84,8 +85,19 @@ class ColoredArena:
         for pg in a.spt:
             self.free[self.page_channel[pg]].append(int(pg))
 
+    def rename(self, old: str, new: str):
+        """Transfer an allocation to a new owner name (pure bookkeeping —
+        pages, SPT and channel binding are untouched). Used by the prefix
+        cache to move a KV page's bytes from a slot's group to a radix-tree
+        node's group when a finished request donates the page."""
+        assert new not in self.allocations, new
+        a = self.allocations.pop(old)
+        a.name = new
+        self.allocations[new] = a
+        return a
+
     # ------------------------------------------------------------------
-    def resplit(self, new_channels: dict) -> dict:
+    def resplit(self, new_channels: dict, pinned: Sequence[str] = ()) -> dict:
         """Move the LS/BE channel split online (the tidal re-plan's
         bimodal-tensor switch): rebind each named allocation to its new
         channel set and migrate its off-color pages onto free pages of that
@@ -102,8 +114,16 @@ class ColoredArena:
         Multiple passes let allocations shrink into space freed by others in
         the same resplit. Returns ``{name: pages_moved}``; names absent from
         the arena (e.g. a KV page group freed since the plan was drawn) are
-        skipped."""
-        names = [n for n in new_channels if n in self.allocations]
+        skipped, as are ``pinned`` names — page groups another page table
+        still references (shared prefix-cache pages) must not be migrated
+        out from under their readers; they stay put until unpinned and a
+        later resplit drains them. ``self.last_resplit`` records the
+        migration's traffic cost ({"pages", "bytes"}) so callers can charge
+        moved bytes to the window's HBM budget instead of treating the
+        bimodal switch as free."""
+        skip = set(pinned)
+        names = [n for n in new_channels
+                 if n in self.allocations and n not in skip]
         for n in names:
             self.allocations[n].channels = tuple(new_channels[n])
         moved = dict.fromkeys(names, 0)
@@ -127,6 +147,9 @@ class ColoredArena:
                             break
             if not progress:
                 break
+        n_moved = sum(moved.values())
+        self.last_resplit = {"pages": n_moved,
+                             "bytes": n_moved * self.granularity}
         return moved
 
     # ------------------------------------------------------------------

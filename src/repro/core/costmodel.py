@@ -176,14 +176,22 @@ def layer_costs(cfg: ModelConfig, B, Sq, Skv, kind, moe_layer: bool,
 
 
 def model_costs(cfg: ModelConfig, B: int, S: int, mode: str,
-                kv_write=None) -> List[OpCost]:
+                kv_write=None, prefix: int = 0) -> List[OpCost]:
     """mode: train | prefill | decode. decode: Sq=1, Skv=S. train adds
     backward (2x fwd flops for grads) via the TRAIN_MULT on the caller side —
     here we return FORWARD costs; see step_costs(). ``kv_write`` (decode
     only): "scatter" models the whole-row mask-scatter cache write,
     "dus"/"paged" the one-token fast paths; None (default) omits the term
-    (the historical behaviour)."""
-    Sq, Skv = (1, S) if mode == "decode" else (S, S)
+    (the historical behaviour). ``prefix`` (prefill only) is the number of
+    leading prompt tokens whose KV is already resident (a prefix-cache hit):
+    only the uncached suffix is computed (Sq = S - prefix) while attention
+    still reads the full Skv = S window — the traffic/FLOPs saving the
+    radix-tree page sharing buys."""
+    if mode == "prefill" and prefix:
+        prefix = min(int(prefix), max(S - 1, 0))
+        Sq, Skv = S - prefix, S
+    else:
+        Sq, Skv = (1, S) if mode == "decode" else (S, S)
     decode = mode == "decode"
     ops: List[OpCost] = []
     bp = _bytes_per()

@@ -50,8 +50,8 @@ class Kernel:
 
 def request_kernels(cfg: ModelConfig, B: int, S: int, mode: str,
                     dev: DeviceSpec, max_kernels: int = 24,
-                    kv_write=None) -> List[Kernel]:
-    ops = model_costs(cfg, B, S, mode, kv_write=kv_write)
+                    kv_write=None, prefix: int = 0) -> List[Kernel]:
+    ops = model_costs(cfg, B, S, mode, kv_write=kv_write, prefix=prefix)
     per = max(1, len(ops) // max_kernels)
     out: List[Kernel] = []
     for i in range(0, len(ops), per):
@@ -97,7 +97,8 @@ class GPUSimulator:
     def __init__(self, dev: DeviceSpec, policy: ComputePolicy,
                  coloring: bool = False, ch_be: float = 1 / 3,
                  spt_overhead: float = 0.007, pcie_coupled=None,
-                 controller=None, control_dt: float = 0.02):
+                 controller=None, control_dt: float = 0.02,
+                 migration_bytes: float = 0.0):
         self.dev = dev
         self.policy = policy
         self.coloring = coloring
@@ -105,6 +106,13 @@ class GPUSimulator:
         self.spt_overhead = spt_overhead
         self.controller = controller
         self.control_dt = control_dt
+        # resplit-aware migration costing: bytes of KV pages that must move
+        # per unit of |Δch_be| at a plan transition (0 = the historical
+        # free-bookkeeping model). The move occupies the memory system for
+        # bytes/hbm_bw seconds: running kernels stall for that long, so the
+        # tidal controller's churn is charged to the window's HBM budget.
+        self.migration_bytes = migration_bytes
+        self.migrated_bytes = 0.0
 
     # ------------------------------------------------------------------
     def _admit_orion(self, k: Kernel, n_ls_active: int) -> bool:
@@ -229,6 +237,13 @@ class GPUSimulator:
                              window_s=self.control_dt)
             plan = self.controller.decide(sig, now)
             self.policy.update(sm_be=plan.sm_be)
+            if plan.ch_be != self.ch_be and self.migration_bytes > 0:
+                moved = self.migration_bytes * abs(plan.ch_be - self.ch_be)
+                self.migrated_bytes += moved
+                stall = moved / self.dev.hbm_bw
+                for tn in tenants:
+                    if tn.active_since is not None:
+                        tn.active_since = max(tn.active_since, now + stall)
             self.ch_be = plan.ch_be
             next_ctrl = now + self.control_dt
 

@@ -32,6 +32,11 @@ def main():
                     help="paged KV cache with page-table admission")
     ap.add_argument("--page-size", type=int, default=8,
                     help="tokens per KV page (with --paged)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix-tree copy-on-write KV page sharing: cached "
+                         "prompt prefixes map into new slots' page tables "
+                         "and only the uncached suffix is prefilled "
+                         "(implies --paged)")
     ap.add_argument("--use-flash", action="store_true",
                     help="ragged Pallas flash-decode (interpret off-TPU)")
     ap.add_argument("--grid-search", action="store_true",
@@ -82,7 +87,8 @@ def main():
     eng = ServingEngine(
         max_seq=args.prompt_len + args.max_new + 4,
         backend=args.backend, plan=plan, coloring=args.coloring,
-        paged=args.paged, page_size=args.page_size, use_flash=args.use_flash,
+        paged=args.paged or args.prefix_cache, page_size=args.page_size,
+        prefix_cache=args.prefix_cache, use_flash=args.use_flash,
         slots_ls=args.slots, slots_be=args.slots, device=args.gpu
         if args.gpu in GPU_DEVICES else "tpu-v5e",
         controller=ctrl, control_interval=args.control_interval,
@@ -90,23 +96,35 @@ def main():
         if args.coloring and args.backend == "jax" else None)
     rng = np.random.default_rng(0)
     # jax backend executes reduced (smoke) models for real; the sim backend
-    # models the FULL configs at paper-scale request shapes
+    # models the FULL configs at paper-scale request shapes. With
+    # --prefix-cache the sim tenants stay stream-derived (no sim_seq): the
+    # prefix estimator only applies to request streams, so a fixed sim_seq
+    # would silently disable the suffix-only prefill costing
     sim = args.backend == "sim"
+    sim_seq_ls = None if args.prefix_cache else 128
+    sim_seq_be = None if args.prefix_cache else 256
     for name in args.ls:
         cfg = (get_config(name) if sim
                else smoke_config(name).replace(activation_dtype="float32"))
         eng.add_tenant(TenantSpec(f"ls:{name}", "LS", nice=10_000), cfg,
-                       sim_seq=128 if sim else None)
+                       sim_seq=sim_seq_ls if sim else None)
     for name in args.be:
         cfg = (get_config(name) if sim
                else smoke_config(name).replace(activation_dtype="float32"))
         eng.add_tenant(TenantSpec(f"be:{name}", "BE", nice=1, batch_size=8
                                   if sim else 1), cfg,
-                       sim_seq=256 if sim else None)
+                       sim_seq=sim_seq_be if sim else None)
+    # with --prefix-cache, give the stream a shared system-prompt prefix so
+    # the radix tree has something to hit (drawn only then, so existing
+    # configurations keep their exact token streams)
+    shared = (rng.integers(0, 256, args.prompt_len // 2)
+              if args.prefix_cache else None)
     for i in range(args.requests):
         for t in eng.tenants:
-            eng.submit(t, rng.integers(0, 256, args.prompt_len),
-                       max_new=args.max_new,
+            toks = rng.integers(0, 256, args.prompt_len)
+            if args.prefix_cache:
+                toks[: len(shared)] = shared
+            eng.submit(t, toks, max_new=args.max_new,
                        at=0.05 * i if args.backend == "sim" else None)
     steps = eng.run_until_idle(horizon=args.requests * 0.1 + 2.0
                                if args.backend == "sim" else None)

@@ -1,3 +1,4 @@
 from .engine import Request, ServingEngine
 from .kv_cache import PagedKVCache, kv_bytes_per_token
+from .prefix_cache import AdmissionPlan, PrefixCache, RadixNode
 from .swap import model_bytes, pipelined_serve_time, swap_requests

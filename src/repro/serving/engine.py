@@ -20,6 +20,18 @@ whole pages; decode appends one page entry per row (no full-cache rewrite);
 pages are freed at eviction. ``use_flash=True`` additionally routes decode
 attention through the ragged Pallas flash-decode kernel.
 
+With ``prefix_cache=True`` (requires ``paged``) each tenant additionally
+keeps a :class:`~repro.serving.prefix_cache.PrefixCache`: a radix tree over
+prompt token ids whose nodes own ref-counted KV pages in the colored arena.
+Admission matches the prompt against the tree, maps the cached prefix pages
+copy-on-write into the slot's page table, and prefills only the uncached
+suffix — strictly fewer free pages and strictly fewer prefill FLOPs/bytes
+per hit, which is extra admission capacity and extra lendable bandwidth at
+equal arena bytes. Committed prompt (and, at eviction, generated) pages are
+donated back to the tree; zero-ref leaves are LRU-evicted under pool
+pressure; shared pages referenced by any live page table are pinned out of
+tidal ``resplit`` migrations until their references drop.
+
 **Sim backend** (``backend="sim"``): drives the discrete-event
 ``core.simulator.GPUSimulator`` with the same request stream, so the paper's
 Fig. 5/6/11/12 scenario sweeps and the real reduced-scale execution share one
@@ -76,6 +88,7 @@ from ..core.simulator import (GPU_DEVICES, GPUSimulator, Kernel, Tenant,
 from ..core.tenancy import TenantSpec
 from ..models import transformer as tf
 from .kv_cache import PagedKVCache, kv_bytes_per_token
+from .prefix_cache import PrefixCache
 
 
 @dataclass
@@ -91,6 +104,7 @@ class Request:
     output: Optional[list] = None
     slot: Optional[int] = None
     failed: bool = False           # rejected (e.g. can never fit KV pages)
+    hit_tokens: int = 0            # prefix-cache hit length at admission
 
     @property
     def latency(self):
@@ -118,7 +132,11 @@ class _TenantRT:
     active: List[Optional[Request]] = field(default_factory=list)
     alloc_name: Optional[str] = None
     kv: Optional[PagedKVCache] = None       # page-table state (paged mode)
+    prefix: Optional[PrefixCache] = None    # radix-tree page sharing
+    replay: Dict[int, int] = field(default_factory=dict)  # slot -> replay pos
     peak_active: int = 0                    # max concurrent decode slots seen
+    prefill_tokens: int = 0                 # prompt tokens admitted
+    prefill_computed: int = 0               # prompt tokens actually prefilled
     # sim-backend knobs / results
     closed_loop: bool = False
     sim_seq: Optional[int] = None
@@ -182,7 +200,10 @@ class _JaxBackend:
             rt.kv = PagedKVCache(cfg, rt.n_slots, eng.max_seq, eng.page_size,
                                  n_pages=eng.kv_pages, arena=eng.arena,
                                  channels=chans, name=rt.spec.name,
-                                 cap_channels=cap)
+                                 cap_channels=cap,
+                                 sharing=eng.prefix_cache)
+            if eng.prefix_cache:
+                rt.prefix = PrefixCache(eng.page_size, rt.kv)
             rt.cache = rt.kv.init_pools()
             rt.decode_fn = jax.jit(_decode_paged, donate_argnums=(2,))
         else:
@@ -198,15 +219,29 @@ class _JaxBackend:
         req.t_done = self.engine.clock()
         rt.done.append(req)
         rt.active[slot] = None
+        pos = int(rt.pos[slot])
         rt.pos[slot] = 0
         rt.last_tok[slot] = 0
-        if rt.kv is not None:
+        if rt.prefix is not None:
+            # KV token stream: prompt, then the fed-back outputs (the last
+            # output token's KV was never written) — donate full pages to
+            # the radix tree, then release the slot's private pages
+            stream = np.concatenate(
+                [req.tokens,
+                 np.asarray(req.output[:max(pos - len(req.tokens), 0)],
+                            np.int32)])
+            rt.prefix.release_slot(slot, stream, pos)
+        elif rt.kv is not None:
             rt.kv.free_slot(slot)
 
     def _take(self, rt: _TenantRT) -> List[Request]:
         """Pop admissible requests off the queue. Whole-row mode: one per
         free slot. Paged mode: additionally page-gated — a request needs
-        pages for its full extent (FIFO, no head-of-line bypass)."""
+        pages for its full extent (FIFO, no head-of-line bypass). With a
+        prefix cache, a radix-tree hit maps cached pages into the slot and
+        the request needs strictly fewer *fresh* pages (suffix + predicted
+        copy-on-write forks); under pool pressure cold cached pages are
+        LRU-evicted before admission stalls."""
         eng = self.engine
         free = [s for s, r in enumerate(rt.active) if r is None]
         if rt.kv is None:
@@ -227,24 +262,71 @@ class _JaxBackend:
                 req.failed = True
                 rt.done.append(rt.queue.pop(0))
                 continue
-            if not rt.kv.can_admit(need):
+            plan, admitted = None, False
+            while True:
+                plan = (rt.prefix.plan(req.tokens, need)
+                        if rt.prefix is not None else None)
+                if plan is not None and plan.match_len < \
+                        eng.prefix_min_hit * len(req.tokens):
+                    plan = None          # hit too small to beat a prefill
+                need_free = (plan.need_free if plan is not None
+                             else rt.kv.pages_for(need))
+                if rt.kv.can_admit_pages(need_free):
+                    admitted = True
+                    break
+                # pool pressure: evict LRU zero-ref tree leaves, then
+                # re-plan and re-check (the eviction may have dropped a
+                # matched node, growing need_free). Terminates: each pass
+                # either admits, fails to evict, or shrinks the tree.
+                if rt.prefix is None or not rt.prefix.evict_until(need_free):
+                    break
+            if not admitted:
                 break
             req.slot = free.pop(0)
-            rt.kv.alloc_slot(req.slot, need)
+            if plan is not None:
+                rt.prefix.acquire(plan, req.slot)
+                req.hit_tokens = plan.match_len
+                rt.replay[req.slot] = plan.replay_from
+            else:
+                if rt.prefix is not None:
+                    rt.prefix.note_miss(len(req.tokens))
+                rt.kv.alloc_slot(req.slot, need)
             take.append(rt.queue.pop(0))
         return take
+
+    def _post_admit(self, rt: _TenantRT, req: Request, first_tok: int):
+        """Shared admission epilogue: seed the slot's decode state with the
+        first output token, donate the freshly committed full prompt pages
+        to the prefix tree, and finish degenerate (max_new<=1) requests."""
+        eng = self.engine
+        s = req.slot
+        L = len(req.tokens)
+        now = eng.clock()
+        req.t_admit, req.t_first = now, now
+        req.output = [int(first_tok)]
+        rt.active[s] = req
+        rt.pos[s] = L
+        rt.last_tok[s] = req.output[0]
+        if rt.prefix is not None:
+            rt.prefix.donate(s, req.tokens, L)
+        if len(req.output) >= max(req.max_new, 1) or rt.pos[s] >= eng.max_seq:
+            self._finish(rt, s)
 
     def _admit(self, rt: _TenantRT) -> bool:
         """Fill free slots from the queue: one batched prefill call per
         prompt-length group (each admitted request gets its first token).
-        Paged mode prefills only to the page-aligned prompt length."""
+        Paged mode prefills only to the page-aligned prompt length;
+        prefix-cache hits skip the batched prefill entirely and replay only
+        their uncached suffix (:meth:`_replay_admit`)."""
         eng = self.engine
         take = self._take(rt)
         if not take:
             return False
+        hits = [r for r in take if r.slot in rt.replay]
         by_len: Dict[int, List[Request]] = {}
         for r in take:
-            by_len.setdefault(len(r.tokens), []).append(r)
+            if r.slot not in rt.replay:
+                by_len.setdefault(len(r.tokens), []).append(r)
         for L, reqs in by_len.items():
             toks = jnp.asarray(np.stack([r.tokens for r in reqs]))
             slots = [r.slot for r in reqs]
@@ -258,26 +340,72 @@ class _JaxBackend:
                 rt.cache = _scatter_rows(rt.cache, pcache,
                                          jnp.asarray(slots, jnp.int32))
             first = np.asarray(jnp.argmax(last_logits[:, 0], axis=-1))
-            now = eng.clock()
+            rt.prefill_tokens += L * len(reqs)
+            rt.prefill_computed += L * len(reqs)
             for j, req in enumerate(reqs):
-                s = slots[j]
-                req.t_admit, req.t_first = now, now
-                req.output = [int(first[j])]
-                rt.active[s] = req
-                rt.pos[s] = L
-                rt.last_tok[s] = req.output[0]
-                if len(req.output) >= max(req.max_new, 1) \
-                        or rt.pos[s] >= eng.max_seq:
-                    self._finish(rt, s)
+                self._post_admit(rt, req, int(first[j]))
+        if hits:
+            self._replay_admit(rt, hits)
         rt.peak_active = max(rt.peak_active,
                              sum(r is not None for r in rt.active))
         return True
+
+    def _replay_admit(self, rt: _TenantRT, reqs: List[Request]):
+        """Prefix-hit admission: the matched pages are already mapped into
+        the slot's page table, so only the uncached suffix is computed —
+        single-token decode steps at the suffix positions, batched across
+        the hit slots, with every other row masked by an all-unmapped page
+        table (writes drop, logits ignored). A write landing in a shared
+        page forks it copy-on-write first. Token equivalence with the
+        batched prefill is by construction: ``tf.prefill`` *is* a scan of
+        this same decode step."""
+        kv = rt.kv
+        cur = {r.slot: rt.replay.pop(r.slot) for r in reqs}
+        ends = {r.slot: len(r.tokens) for r in reqs}
+        prompt = {r.slot: np.asarray(r.tokens, np.int32) for r in reqs}
+        first = {}
+        n, P = kv.n_slots, kv.pages_per_slot
+        while cur:
+            rows = list(cur.items())
+            toks = np.zeros((n, 1), np.int32)
+            pos = np.zeros(n, np.int32)
+            for s, p in rows:
+                if kv.needs_fork(s, p):
+                    rt.cache = kv.fork_cow(rt.cache, s, p // kv.page_size)
+                toks[s, 0] = prompt[s][p]
+                pos[s] = p
+            tbl = np.full((n, P), kv.n_pages, np.int32)
+            for s, _ in rows:
+                tbl[s] = kv.page_table[s]
+            logits, rt.cache = rt.decode_fn(rt.params, jnp.asarray(toks),
+                                            rt.cache, jnp.asarray(pos),
+                                            jnp.asarray(tbl))
+            done_rows = [s for s, p in rows if p + 1 >= ends[s]]
+            if done_rows:
+                arg = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+                for s in done_rows:
+                    first[s] = int(arg[s])
+                    del cur[s]
+            for s in cur:
+                cur[s] += 1
+            rt.prefill_computed += len(rows)
+        for r in reqs:
+            rt.prefill_tokens += len(r.tokens)
+            self._post_admit(rt, r, first[r.slot])
 
     def _decode(self, rt: _TenantRT):
         """One batched decode across every active slot of this tenant."""
         eng = self.engine
         rt.peak_active = max(rt.peak_active,
                              sum(r is not None for r in rt.active))
+        if rt.prefix is not None:
+            # safety net: a decode append must never mutate a shared page
+            # (the admission replay forks every page it will write, so this
+            # does not fire on the predicted paths)
+            for s, req in enumerate(rt.active):
+                if req is not None and rt.kv.needs_fork(s, int(rt.pos[s])):
+                    rt.cache = rt.kv.fork_cow(
+                        rt.cache, s, int(rt.pos[s]) // rt.kv.page_size)
         toks = jnp.asarray(rt.last_tok[:, None])
         if rt.kv is not None:
             logits, rt.cache = rt.decode_fn(rt.params, toks, rt.cache,
@@ -299,9 +427,16 @@ class _JaxBackend:
                 self._finish(rt, s)
 
     def quantum(self, rt: _TenantRT) -> bool:
-        progressed = self._admit(rt)
+        # decode precedes admission: a request that finishes at this step
+        # releases its KV pages *before* this window's admission pass, so
+        # pages freed mid-window admit a waiting request in the same window
+        # (previously a freed-but-unreleased slot bounced an admissible
+        # request to the next quantum)
+        progressed = False
         if any(r is not None for r in rt.active):
             self._decode(rt)
+            progressed = True
+        if self._admit(rt):
             progressed = True
         return progressed
 
@@ -354,8 +489,21 @@ class _SimBackend:
             else:
                 S = eng.max_seq
             B = max(1, rt.spec.batch_size)
+            # prefix-cache: replay the stream through a token-only radix
+            # tree to estimate the mean cached-prefix length — the cost
+            # model then charges prefill traffic only for the uncached
+            # suffix (the bandwidth the sharing returns to the budget)
+            prefix_est = 0
+            if eng.prefix_cache and pending and rt.sim_seq is None:
+                est = PrefixCache(eng.page_size)
+                seen = []
+                for r in pending:
+                    seen.append(min(est.match_len(r.tokens),
+                                    max(len(r.tokens) - 1, 0)))
+                    est.insert_tokens(r.tokens)
+                prefix_est = int(np.mean(seen)) if seen else 0
             kern = request_kernels(rt.cfg, B, S, "prefill", self.dev,
-                                   rt.max_kernels)
+                                   rt.max_kernels, prefix=prefix_est)
             # decode phase carries the KV-cache *write* traffic of the
             # engine's actual decode path — paged appends are O(tokens);
             # whole-row mask-scatter rewrites the window. Kept at (chunked)
@@ -383,8 +531,10 @@ class _SimBackend:
         policy = ComputePolicy(kind=self.policy_kind, sm_be=sm_be)
         sim = GPUSimulator(self.dev, policy, coloring=eng.coloring,
                            ch_be=eng.ch_be, controller=eng.controller,
-                           control_dt=eng.control_dt)
+                           control_dt=eng.control_dt,
+                           migration_bytes=eng.migration_bytes)
         res = sim.run([tn for _, _, tn in built], horizon)
+        eng.migrated_bytes += sim.migrated_bytes
         total = 0
         for rt, pending, tn in built:
             if tn.closed_loop:
@@ -434,12 +584,30 @@ class ServingEngine:
                  kv_pages: Optional[int] = None, use_flash: bool = False,
                  device="tpu-v5e", policy: str = "sgdrc",
                  controller=None, control_interval: int = 4,
-                 control_dt: float = 0.02):
+                 control_dt: float = 0.02, prefix_cache: bool = False,
+                 prefix_min_hit: float = 0.125,
+                 migration_bytes: float = 0.0):
         self.max_seq = max_seq
         self.paged = paged
         self.page_size = page_size
         self.kv_pages = kv_pages
         self.use_flash = use_flash
+        # radix-tree copy-on-write KV page sharing (serving.prefix_cache):
+        # common prompt prefixes map cached pages into new slots' tables and
+        # only the uncached suffix is prefilled
+        if prefix_cache and backend == "jax" and not paged:
+            raise ValueError("prefix_cache=True requires paged=True")
+        self.prefix_cache = prefix_cache
+        # minimum hit fraction to use a match: the suffix is replayed one
+        # token per decode step, so a tiny hit on a long prompt would trade
+        # one batched prefill for a long sequential replay (a batched
+        # suffix-prefill model path would lift this — see ROADMAP)
+        self.prefix_min_hit = prefix_min_hit
+        # resplit-aware migration costing: jax backend accumulates the
+        # arena's actual moved-page bytes; the sim backend charges
+        # migration_bytes * |Δch_be| of memory-system stall per transition
+        self.migration_bytes = migration_bytes
+        self.migrated_bytes = 0
         self.tenants: Dict[str, _TenantRT] = {}
         self.clock = now_fn or time.perf_counter
         self._t0 = self.clock()     # epoch for sim-backend virtual arrivals
@@ -582,11 +750,23 @@ class ServingEngine:
             self.apply_plan(plan)
         elif self.arena is not None:
             # drain leftover off-color pages from an earlier partial
-            # migration (BE groups still borrowing LS channels)
-            debt = {n: a.channels for n, a in self.arena.allocations.items()
-                    if self.arena.isolation_violations(a)}
+            # migration (BE groups still borrowing LS channels) — but never
+            # a pinned shared group: a prefix-tree page another slot's page
+            # table still references stays put until its refs drop, then
+            # drains to the current color here
+            pinned = set()
+            debt = {}
+            for rt in self.tenants.values():
+                if rt.prefix is not None:
+                    pinned.update(rt.prefix.pinned_names())
+                    debt.update(rt.prefix.drain_recolor())
+            debt.update({n: a.channels
+                         for n, a in self.arena.allocations.items()
+                         if n not in pinned and n not in debt
+                         and self.arena.isolation_violations(a)})
             if debt:
-                self.arena.resplit(debt)
+                self.arena.resplit(debt, pinned=pinned)
+                self.migrated_bytes += self.arena.last_resplit["bytes"]
 
     def _channel_sets(self, ch_be: float):
         """Engine-local channel sets for a plan's ``ch_be`` (the plan's own
@@ -604,10 +784,17 @@ class ServingEngine:
         moves immediately; a ``ch_be`` move resplits the arena (off-color
         pages migrate to the new sets) and recolors every KV page pool so
         future page groups land on the new split. Device pools and page
-        tables are untouched — a mid-run plan change never alters tokens."""
+        tables are untouched — a mid-run plan change never alters tokens.
+
+        Prefix-tree node groups whose pages are still referenced by a live
+        page table are *pinned* out of the resplit (they drain later via
+        :meth:`_maybe_control`); the migration's moved bytes are charged to
+        the window's traffic budget (``migrated_bytes``), not treated as
+        free bookkeeping."""
         prev = self._applied_plan
         self.sm_be = plan.sm_be
         moved = 0
+        pinned = []
         if self.arena is not None and (prev is None
                                        or plan.ch_be != prev.ch_be):
             new_ls, new_be = self._channel_sets(plan.ch_be)
@@ -616,14 +803,22 @@ class ServingEngine:
                 chans = new_ls if rt.spec.is_ls else new_be
                 if rt.kv is not None:
                     mapping.update(rt.kv.recolor(chans))
+                    if rt.prefix is not None:
+                        mapping.update(rt.prefix.recolor(chans))
+                        pinned += rt.prefix.pinned_names()
                 elif rt.alloc_name is not None:
                     mapping[rt.alloc_name] = chans
             self.ls_ch, self.be_ch = new_ls, new_be
-            moved = sum(self.arena.resplit(mapping).values())
+            moved = sum(self.arena.resplit(mapping, pinned=pinned).values())
+            self.migrated_bytes += self.arena.last_resplit["bytes"]
         self._applied_plan = plan
         self.transitions.append({"step": self._step_idx,
                                  "sm_be": plan.sm_be, "ch_be": plan.ch_be,
-                                 "pages_moved": int(moved)})
+                                 "pages_moved": int(moved),
+                                 "bytes_moved": int(
+                                     moved * (self.arena.granularity
+                                              if self.arena else 0)),
+                                 "pinned_groups": len(pinned)})
 
     # ------------------------------------------------------------------
     def _pick(self, rts: List[_TenantRT]) -> List[_TenantRT]:
@@ -693,6 +888,7 @@ class ServingEngine:
         the honest per-run signal)."""
         t0 = self.clock()
         before = self._class_counts()
+        mig0 = self.migrated_bytes
         n = self.backend.run_until_idle(max_steps=max_steps, horizon=horizon)
         if self.backend_name == "jax":
             # accumulate across calls: metrics() divides cumulative
@@ -704,7 +900,11 @@ class ServingEngine:
             # widest-horizon semantics the sim backend always had)
             win = self.sim_result.horizon if self.sim_result else 0.0
         after = self._class_counts()
-        self._last_window = {"elapsed_s": win}
+        # resplit-aware migration costing: the window's HBM traffic budget
+        # carries the pages the tidal controller moved during it
+        self._last_window = {"elapsed_s": win,
+                             "migrated_bytes": int(self.migrated_bytes
+                                                   - mig0)}
         for pri in ("LS", "BE"):
             done = after[pri][0] - before[pri][0]
             toks = after[pri][1] - before[pri][1]
@@ -737,6 +937,14 @@ class ServingEngine:
                 out[name]["kv_pages"] = {"total": rt.kv.n_pages,
                                          "in_use": rt.kv.used_pages,
                                          "page_size": rt.kv.page_size}
+            if rt.prefix is not None:
+                out[name]["prefix_cache"] = rt.prefix.stats()
+            if rt.prefill_tokens:
+                out[name]["prefill_tokens"] = {
+                    "admitted": rt.prefill_tokens,
+                    "computed": rt.prefill_computed,
+                    "saved": rt.prefill_tokens - rt.prefill_computed,
+                }
             c = cls[rt.spec.priority]
             c["done"] += lats
             c["completed"] += len(served) + rt.sim_completed
@@ -772,6 +980,7 @@ class ServingEngine:
                 "transitions": len(self.transitions),
                 "pages_moved": sum(t["pages_moved"]
                                    for t in self.transitions),
+                "migrated_bytes": int(self.migrated_bytes),
             }
         if self.arena is not None:
             out["_coloring"] = {

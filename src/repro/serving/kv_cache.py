@@ -78,13 +78,26 @@ class PagedKVCache:
                   the tidal maximum — admission still re-checks the *live*
                   colored bytes of ``channels``, which :meth:`recolor`
                   moves at plan transitions.
+      sharing     enable page refcounts + copy-on-write sharing (the prefix
+                  cache's contract): pages may be mapped into several slots'
+                  page tables (:meth:`share`), a write into a shared page
+                  forks it first (:meth:`fork_cow`), and arena accounting
+                  moves to one group per page so a page's bytes can be
+                  renamed from a slot's group to a radix-tree node's group
+                  when the slot donates it.
+
+    Refcount invariant (sharing mode): ``page_ref[p]`` = number of page
+    tables mapping ``p`` plus one if a radix-tree node owns ``p``. A page
+    returns to the free list only at refcount zero; it is writable by a slot
+    only while that slot is its sole owner (refcount 1 and slot-owned).
     """
 
     def __init__(self, cfg: ModelConfig, n_slots: int, max_seq: int,
                  page_size: int, *, n_pages: Optional[int] = None,
                  dtype=None, arena: Optional[ColoredArena] = None,
                  channels: Optional[Sequence[int]] = None, name: str = "kv",
-                 cap_channels: Optional[Sequence[int]] = None):
+                 cap_channels: Optional[Sequence[int]] = None,
+                 sharing: bool = False):
         assert tf.pageable(cfg), f"{cfg.name} is not pageable"
         self.cfg = cfg
         self.n_slots = n_slots
@@ -111,6 +124,21 @@ class PagedKVCache:
         self.slot_pages: List[List[int]] = [[] for _ in range(n_slots)]
         self.free_list: List[int] = list(range(n_pages))[::-1]
         self._pt_dev = None          # device copy, refreshed on alloc/free
+        # -- sharing state (prefix cache contract) ---------------------
+        self.sharing = sharing
+        self.page_ref = np.zeros(n_pages, np.int32)
+        # per slot: tree-owned pages mapped read-only, the set of page-table
+        # indices that are tree-owned (not writable), and pre-reserved
+        # copy-on-write destination pages
+        self.slot_shared: List[List[int]] = [[] for _ in range(n_slots)]
+        self.slot_shared_idx: List[set] = [set() for _ in range(n_slots)]
+        self.slot_reserve: List[List[int]] = [[] for _ in range(n_slots)]
+        self.cow_forks = 0
+
+    def _slot_group(self, slot: int, page: int) -> str:
+        """Arena group of one slot-owned page (sharing mode: one group per
+        page, so donation can ``rename`` it to a tree node's group)."""
+        return f"{self.name}:s{slot}:p{page}"
 
     # -- capacity ------------------------------------------------------
     def pages_for(self, tokens: int) -> int:
@@ -124,46 +152,173 @@ class PagedKVCache:
     def used_pages(self) -> int:
         return self.n_pages - len(self.free_list)
 
-    def can_admit(self, tokens: int) -> bool:
-        n = self.pages_for(tokens)
+    def _arena_pages(self, n: int) -> int:
+        """Colored arena pages n KV pages occupy (per-page groups round each
+        page up to the coloring granularity)."""
+        g = self.arena.granularity
+        if self.sharing:
+            return n * -(-self.bytes_per_page // g)
+        return -(-n * self.bytes_per_page // g)
+
+    def can_admit_pages(self, n: int) -> bool:
         if n > len(self.free_list):
             return False
         if self.arena is not None:
             # the arena is shared with other tenants: re-check colored bytes
-            need = -(-n * self.bytes_per_page // self.arena.granularity)
-            return self.arena.free_pages(self.channels) >= need
+            return self.arena.free_pages(self.channels) >= self._arena_pages(n)
         return True
 
+    def can_admit(self, tokens: int) -> bool:
+        return self.can_admit_pages(self.pages_for(tokens))
+
     # -- alloc / free at step boundaries -------------------------------
+    def _alloc_pages(self, slot: int, n: int) -> List[int]:
+        if n > len(self.free_list):
+            raise OutOfColoredMemory(f"{self.name}: need {n} KV pages")
+        if self.arena is not None:
+            if self.arena.free_pages(self.channels) < self._arena_pages(n):
+                raise OutOfColoredMemory(
+                    f"{self.name}: need {n} colored KV pages")
+            if not self.sharing:
+                self.arena.alloc(f"{self.name}:s{slot}",
+                                 n * self.bytes_per_page, self.channels)
+        pages = [self.free_list.pop() for _ in range(n)]
+        for p in pages:
+            self.page_ref[p] = 1
+            if self.arena is not None and self.sharing:
+                self.arena.alloc(self._slot_group(slot, p),
+                                 self.bytes_per_page, self.channels)
+        return pages
+
     def alloc_slot(self, slot: int, tokens: int) -> List[int]:
         """Reserve pages for a request's full extent (prompt + max_new,
         capped at max_seq) and map them into the slot's page table."""
         n = self.pages_for(tokens)
-        assert not self.slot_pages[slot], f"slot {slot} already mapped"
-        if n > len(self.free_list):
-            raise OutOfColoredMemory(f"{self.name}: need {n} KV pages")
-        if self.arena is not None:
-            self.arena.alloc(f"{self.name}:s{slot}", n * self.bytes_per_page,
-                             self.channels)
-        pages = [self.free_list.pop() for _ in range(n)]
+        assert not self.slot_pages[slot] and not self.slot_shared[slot], \
+            f"slot {slot} already mapped"
+        pages = self._alloc_pages(slot, n)
         self.slot_pages[slot] = pages
         self.page_table[slot, :n] = pages
         self._pt_dev = None
         return pages
 
-    def free_slot(self, slot: int):
-        pages = self.slot_pages[slot]
-        if not pages:
+    # -- sharing primitives (driven by serving.prefix_cache) -----------
+    def share(self, slot: int, pages: Sequence[int]):
+        """Map tree-owned pages read-only into the slot's leading page-table
+        entries (a prefix-cache hit). Each mapping takes a reference."""
+        assert not self.slot_pages[slot] and not self.slot_shared[slot], \
+            f"slot {slot} already mapped"
+        k = len(pages)
+        if k == 0:
             return
-        self.free_list.extend(pages)
+        self.page_table[slot, :k] = pages
+        for p in pages:
+            self.page_ref[p] += 1
+        self.slot_shared[slot] = list(pages)
+        self.slot_shared_idx[slot] = set(range(k))
+        self._pt_dev = None
+
+    def reserve(self, slot: int, n: int):
+        """Pre-reserve copy-on-write destination pages for the writes this
+        admission will make into shared pages (predicted at admission, so a
+        later fork can never fail on an emptied pool)."""
+        if n > 0:
+            self.slot_reserve[slot] = self._alloc_pages(slot, n)
+
+    def alloc_suffix(self, slot: int, tokens: int) -> List[int]:
+        """Allocate private pages for the uncached tail of a request whose
+        prefix is mapped via :meth:`share` (partial-hit admission: strictly
+        fewer fresh pages than a cold request needs)."""
+        n_total = self.pages_for(tokens)
+        k = len(self.slot_shared[slot])
+        n_new = n_total - k
+        assert n_new >= 0, (n_total, k)
+        pages = self._alloc_pages(slot, n_new)
+        self.slot_pages[slot] = pages
+        self.page_table[slot, k:n_total] = pages
+        self._pt_dev = None
+        return pages
+
+    def needs_fork(self, slot: int, pos: int) -> bool:
+        """True when a token write at ``pos`` would mutate a tree-owned
+        (shared) page — the caller must :meth:`fork_cow` first."""
+        return (pos // self.page_size) in self.slot_shared_idx[slot]
+
+    def fork_cow(self, pools, slot: int, j: int):
+        """Copy-on-write fork of the slot's ``j``-th page-table entry: the
+        shared page's device contents are copied into a private page (from
+        the slot's admission reserve), the table is remapped, and the shared
+        page loses this slot's reference. Returns the updated pools."""
+        src = int(self.page_table[slot, j])
+        if self.slot_reserve[slot]:
+            dst = self.slot_reserve[slot].pop()
+        else:                               # safety net: unpredicted fork
+            dst = self._alloc_pages(slot, 1)[0]
+        pools = _copy_page_tree(pools, src, dst)
+        self.page_ref[src] -= 1
+        assert self.page_ref[src] >= 1, "shared page lost its tree owner"
+        self.slot_shared[slot].remove(src)
+        self.slot_shared_idx[slot].discard(j)
+        self.slot_pages[slot].append(dst)
+        self.page_table[slot, j] = dst
+        self._pt_dev = None
+        self.cow_forks += 1
+        return pools
+
+    def transfer_to_tree(self, slot: int, j: int, node_group: str) -> int:
+        """Donate the slot-owned page at table index ``j`` to a radix-tree
+        node: the tree takes its own reference and the page's arena bytes
+        are renamed from the slot's group to ``node_group``. The slot keeps
+        its (now read-only) mapping until eviction. Returns the page id."""
+        page = int(self.page_table[slot, j])
+        self.slot_pages[slot].remove(page)
+        self.slot_shared[slot].append(page)
+        self.slot_shared_idx[slot].add(j)
+        self.page_ref[page] += 1
+        if self.arena is not None:
+            self.arena.rename(self._slot_group(slot, page), node_group)
+        return page
+
+    def tree_release_page(self, page: int, node_group: str):
+        """Prefix-cache eviction of a zero-ref node: drop the tree's
+        reference and return the page to the pool + arena."""
+        self.page_ref[page] -= 1
+        assert self.page_ref[page] == 0, \
+            f"evicting page {page} still referenced by a live page table"
+        self.free_list.append(page)
+        if self.arena is not None:
+            self.arena.release(node_group)
+
+    def free_slot(self, slot: int):
+        own = self.slot_pages[slot] + self.slot_reserve[slot]
+        shared = self.slot_shared[slot]
+        if not own and not shared:
+            return
+        for p in shared:
+            self.page_ref[p] -= 1        # the tree keeps its own reference
+            assert self.page_ref[p] >= 1
+        for p in own:
+            self.page_ref[p] -= 1
+            assert self.page_ref[p] == 0
+            self.free_list.append(p)
+            if self.arena is not None and self.sharing:
+                self.arena.release(self._slot_group(slot, p))
+        if self.arena is not None and not self.sharing and \
+                self.slot_pages[slot]:
+            self.arena.release(f"{self.name}:s{slot}")
         self.slot_pages[slot] = []
+        self.slot_shared[slot] = []
+        self.slot_shared_idx[slot] = set()
+        self.slot_reserve[slot] = []
         self.page_table[slot, :] = self.n_pages
         self._pt_dev = None
-        if self.arena is not None:
-            self.arena.release(f"{self.name}:s{slot}")
 
     def release(self):
-        """Return every live page group to the arena (tenant teardown)."""
+        """Return every live slot page group to the arena (tenant
+        teardown). Sharing mode: drain the slots first, then call the
+        prefix cache's ``release_tree()`` for the tree-owned pages and
+        their ``:px`` arena groups — this method only drops the slots'
+        references."""
         for slot in range(self.n_slots):
             self.free_slot(slot)
 
@@ -174,10 +329,16 @@ class PagedKVCache:
         :meth:`~repro.core.coloring.allocator.ColoredArena.resplit` batch
         (the engine merges every tenant's mapping into a single arena
         migration per plan transition). Device pools and page tables are
-        untouched — tokens are unaffected by a mid-run recolor."""
+        untouched — tokens are unaffected by a mid-run recolor. Sharing
+        mode enumerates the per-page slot groups; tree-node groups are the
+        prefix cache's to recolor (it pins referenced ones)."""
         self.channels = tuple(new_channels)
         if self.arena is None:
             return {}
+        if self.sharing:
+            return {self._slot_group(s, p): self.channels
+                    for s in range(self.n_slots)
+                    for p in self.slot_pages[s] + self.slot_reserve[s]}
         return {f"{self.name}:s{s}": self.channels
                 for s in range(self.n_slots) if self.slot_pages[s]}
 
@@ -219,6 +380,28 @@ class PagedKVCache:
                               ps=ps, batch_axis=1),
             pools["layers"], prefill_cache["layers"])
         return out
+
+
+def _copy_page_tree(pools, src: int, dst: int):
+    """Device-side page copy for a copy-on-write fork: every pool leaf's
+    ``src`` page is duplicated onto its ``dst`` page (donated, in place)."""
+    out = dict(pools)
+    if "prefix" in pools:
+        out["prefix"] = [
+            jax.tree.map(functools.partial(_copy_page, src=src, dst=dst,
+                                           batch_axis=0), pp)
+            for pp in pools["prefix"]]
+    out["layers"] = jax.tree.map(
+        functools.partial(_copy_page, src=src, dst=dst, batch_axis=1),
+        pools["layers"])
+    return out
+
+
+@functools.partial(jax.jit, donate_argnums=(0,),
+                   static_argnames=("batch_axis",))
+def _copy_page(pool, *, src, dst, batch_axis):
+    ix = (slice(None),) * batch_axis
+    return pool.at[ix + (dst,)].set(pool[ix + (src,)])
 
 
 @functools.partial(jax.jit, donate_argnums=(0,),

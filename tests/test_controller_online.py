@@ -155,6 +155,31 @@ def test_sim_time_varying_schedule_reclaims_trough_bandwidth():
     assert dynamic.tenants[1].completed > 1.2 * static.tenants[1].completed
 
 
+def test_sim_migration_costing_charges_moved_bytes():
+    """Resplit-aware migration costing: with migration_bytes set, a ch_be
+    transition stalls the memory system for moved/hbm_bw seconds instead of
+    being free bookkeeping — BE completes no more than under free
+    migration, and the moved bytes are accounted per |Δch_be|."""
+    dev = GPU_DEVICES["tesla-v100"]
+
+    def run(mig):
+        plan = _plan(0.3, 1 / 3)
+        sched = PlanSchedule([(0.0, plan), (0.6, lending_plan(plan, 32))])
+        sim = GPUSimulator(dev, ComputePolicy("sgdrc", sm_be=0.3),
+                           coloring=True, ch_be=1 / 3, controller=sched,
+                           control_dt=0.005, migration_bytes=mig)
+        return sim, sim.run(_sim_tenants(), 2.0)
+
+    sim_free, r_free = run(0.0)
+    sim_cost, r_cost = run(80e9)          # ~60ms of stall at the switch
+    assert sim_free.migrated_bytes == 0
+    assert sim_cost.migrated_bytes == pytest.approx(80e9 * (1 - 1 / 3))
+    assert r_cost.tenants[1].completed < r_free.tenants[1].completed
+    # LS had drained before the 0.6s switch: its latencies are untouched
+    assert r_cost.tenants[0].latencies == pytest.approx(
+        r_free.tenants[0].latencies)
+
+
 def test_sim_online_controller_beats_static_at_equal_slo():
     static = _run_sim(None)
     ctrl = OnlineController(tidal_frontier(_plan(0.3, 1 / 3), 32),

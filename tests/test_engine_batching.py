@@ -226,6 +226,26 @@ def test_paged_queue_drains_when_pages_free(tiny):
     assert all(r.output is not None and len(r.output) == 3 for r in reqs)
 
 
+def test_pages_freed_mid_window_admit_same_window(tiny):
+    """Eviction ordering: a request finishing at a quantum releases its KV
+    pages *before* that quantum's admission pass, so a queued request that
+    needs exactly those pages is admitted in the same quantum (previously a
+    freed-but-unreleased slot bounced it by one window)."""
+    cfg, params = tiny
+    rng = np.random.default_rng(29)
+    eng = ServingEngine(max_seq=MAX_SEQ, slots_ls=4, paged=True, page_size=4,
+                        kv_pages=2)      # pool holds exactly one request
+    eng.add_tenant(TenantSpec("ls0", "LS"), cfg, params=params)
+    a = eng.submit("ls0", rng.integers(0, 100, 4), max_new=3)   # 2 pages
+    b = eng.submit("ls0", rng.integers(0, 100, 4), max_new=3)   # 2 pages
+    while a.t_done is None:
+        assert eng.step()
+    # the quantum that finished A must also have admitted B
+    assert b.t_admit is not None and b.t_admit >= a.t_done
+    eng.run_until_idle()
+    assert len(b.output) == 3
+
+
 def test_paged_impossible_request_fails_not_deadlocks(tiny):
     """A request that can never fit the page pool is failed (empty output)
     instead of blocking the queue head forever; later requests still run."""

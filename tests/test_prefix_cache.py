@@ -1,0 +1,280 @@
+"""Prefix cache: radix-tree matching, copy-on-write page sharing, LRU
+eviction, token bit-equality against the no-sharing engine under random
+interleavings, and recolor/resplit pinning of referenced shared pages."""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.controller import (OnlineController, ResourcePlan,
+                                   tidal_frontier)
+from repro.core.tenancy import TenantSpec
+from repro.serving import PrefixCache, ServingEngine
+from repro.serving.kv_cache import kv_bytes_per_token
+
+PS = 4
+
+
+# ---------------------------------------------------------------------------
+# radix tree (token-only estimator mode)
+# ---------------------------------------------------------------------------
+
+def test_radix_match_and_insert():
+    pc = PrefixCache(PS)
+    a = list(range(12))
+    pc.insert_tokens(a)                       # 3 full pages
+    assert pc.match_len(a) == 12
+    assert pc.match_len(a[:8]) == 8
+    assert pc.match_len(a[:6]) == 6           # partial into page 2
+    assert pc.match_len([99] + a) == 0
+    # divergence inside a page -> sibling edges sharing a token prefix
+    b = a[:9] + [70, 71, 72]
+    pc.insert_tokens(b)
+    assert pc.match_len(b) == 12
+    assert pc.match_len(a) == 12              # original branch intact
+    c = a[:9] + [70, 99]
+    assert pc.match_len(c) == 10              # longest-common-prefix child
+
+    # inserting an existing stream adds no nodes
+    n0 = pc.inserted
+    pc.insert_tokens(a)
+    assert pc.inserted == n0
+
+
+def test_plan_arithmetic(tiny_cfg):
+    """A hit needs strictly fewer free pages than the dense extent, and the
+    copy-on-write fork count is predicted exactly at admission."""
+    eng = ServingEngine(max_seq=20, paged=True, page_size=PS,
+                        prefix_cache=True, slots_ls=2)
+    eng.add_tenant(TenantSpec("ls0", "LS"), tiny_cfg)
+    rt = eng.tenants["ls0"]
+    prompt = np.arange(12)
+    req = eng.submit("ls0", prompt, max_new=4)
+    eng.run_until_idle()
+    assert req.hit_tokens == 0
+    # full-prompt re-submission: 3 pages cached; the last prompt token is
+    # replayed, forking the page that holds it
+    plan = rt.prefix.plan(prompt, 16)
+    assert plan is not None
+    assert plan.match_len == 11               # capped at L-1
+    assert plan.n_shared == 3
+    assert plan.n_cow == 1                    # replay pos 11 -> page 2 forks
+    assert plan.need_free == plan.n_new + 1 < rt.kv.pages_for(16)
+    # page-aligned partial hit: no fork needed
+    plan2 = rt.prefix.plan(np.concatenate([prompt[:8], [88, 89, 90, 91]]),
+                           16)
+    assert plan2.match_len == 8 and plan2.n_shared == 2 and plan2.n_cow == 0
+
+
+# ---------------------------------------------------------------------------
+# engine: sharing on == sharing off, bit for bit
+# ---------------------------------------------------------------------------
+
+def _invariants(kv):
+    assert (kv.page_ref >= 0).all()
+    pt = kv.page_table
+    mapped = pt[pt < kv.n_pages]
+    # every live page-table entry holds a reference; free pages hold none
+    assert (kv.page_ref[mapped] >= 1).all()
+    assert all(kv.page_ref[p] == 0 for p in kv.free_list)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=3, deadline=None)
+def test_prefix_bit_equal_random_interleaving(seed):
+    """Random admit/decode/evict/fork interleavings (shared-prefix prompt
+    pool, more requests than pages): token outputs bit-equal with the
+    prefix cache on and off, refcounts never negative, evicted nodes never
+    referenced by a live page table (asserted inside tree_release_page)."""
+    from repro.configs import smoke_config
+    cfg = smoke_config("stablelm-1.6b").replace(num_layers=1,
+                                                activation_dtype="float32")
+    rng = np.random.default_rng(seed)
+    bases = [rng.integers(0, 100, 8), rng.integers(0, 100, 8)]
+    ops = []
+    for _ in range(10):
+        base = bases[int(rng.integers(2))]
+        keep = int(rng.integers(2, 9))
+        tail = rng.integers(0, 100, int(rng.integers(0, 5)))
+        ops.append((np.concatenate([base[:keep], tail]).astype(np.int32),
+                    int(rng.integers(1, 7)), int(rng.integers(1, 4))))
+
+    def serve(prefix):
+        eng = ServingEngine(max_seq=16, slots_ls=3, paged=True, page_size=PS,
+                            kv_pages=10, prefix_cache=prefix)
+        eng.add_tenant(TenantSpec("ls0", "LS"), cfg,
+                       key=__import__("jax").random.key(0))
+        reqs = []
+        for toks, max_new, steps in ops:
+            reqs.append(eng.submit("ls0", toks, max_new=max_new))
+            for _ in range(steps):
+                eng.step()
+            if prefix:
+                _invariants(eng.tenants["ls0"].kv)
+        eng.run_until_idle()
+        if prefix:
+            _invariants(eng.tenants["ls0"].kv)
+        return eng, [r.output for r in reqs]
+
+    eng_off, out_off = serve(False)
+    eng_on, out_on = serve(True)
+    assert out_on == out_off
+    st_on = eng_on.tenants["ls0"].prefix.stats()
+    assert st_on["hits"] + st_on["misses"] == sum(
+        1 for r in eng_on.tenants["ls0"].done if not r.failed)
+
+
+def test_eviction_under_pool_pressure(tiny_cfg, rng):
+    """Cold cached pages are LRU-evicted so admission proceeds; the tree
+    never blocks the pool, and zero-ref leaves go first."""
+    eng = ServingEngine(max_seq=16, slots_ls=2, paged=True, page_size=PS,
+                        kv_pages=6, prefix_cache=True)
+    eng.add_tenant(TenantSpec("ls0", "LS"), tiny_cfg)
+    rt = eng.tenants["ls0"]
+    # distinct prompts, sequential: each finish donates full pages; with a
+    # 6-page pool the tree must shed old nodes to admit new requests
+    for i in range(5):
+        eng.submit("ls0", rng.integers(0, 100, 8), max_new=3)
+        eng.run_until_idle()
+    m = eng.metrics()["ls0"]
+    assert m["completed"] == 5
+    assert m["prefix_cache"]["evictions"] > 0
+    _invariants(rt.kv)
+    # every surviving tree page is accounted for: ref exactly 1 (the tree)
+    for nd in rt.prefix._nodes():
+        assert nd.ref == 0 and rt.kv.page_ref[nd.page] == 1
+
+
+def test_release_tree_teardown(tiny_cfg, fake_hash_model, rng):
+    """Tenant teardown in sharing mode: draining the slots and releasing
+    the tree returns every page to the pool and every arena group (slot and
+    ``:px`` node groups alike) to the arena — no colored-byte leak across
+    tenant re-creation."""
+    eng = _colored_engine(tiny_cfg, fake_hash_model)
+    eng.add_tenant(TenantSpec("ls0", "LS"), tiny_cfg)
+    rt = eng.tenants["ls0"]
+    for _ in range(3):
+        eng.submit("ls0", rng.integers(0, 100, 8), max_new=3)
+    eng.run_until_idle()
+    assert any(True for _ in rt.prefix._nodes())    # tree holds pages
+    rt.kv.release()
+    rt.prefix.release_tree()
+    assert len(rt.kv.free_list) == rt.kv.n_pages
+    assert (rt.kv.page_ref == 0).all()
+    assert not any(n.startswith("ls0") for n in eng.arena.allocations)
+
+
+def test_cow_fork_isolates_sharers(tiny_cfg):
+    """Two live requests sharing a full-prompt prefix: the second's replay
+    forks the boundary page, and the first's output is unaffected (compared
+    against the sharing-off run)."""
+    prompt = np.arange(8, dtype=np.int32)
+
+    def serve(prefix):
+        eng = ServingEngine(max_seq=16, slots_ls=2, paged=True, page_size=PS,
+                            prefix_cache=prefix)
+        eng.add_tenant(TenantSpec("ls0", "LS"), tiny_cfg)
+        a = eng.submit("ls0", prompt, max_new=6)
+        eng.step()                     # admit+donate A, A still decoding
+        b = eng.submit("ls0", prompt, max_new=6)   # full-prompt hit
+        eng.run_until_idle()
+        return eng, a.output, b.output
+
+    eng_on, a_on, b_on = serve(True)
+    _, a_off, b_off = serve(False)
+    assert (a_on, b_on) == (a_off, b_off)
+    assert a_on == b_on                       # same prompt, greedy decode
+    kv = eng_on.tenants["ls0"].kv
+    assert kv.cow_forks >= 1
+    reqs = [r for r in eng_on.tenants["ls0"].done]
+    assert reqs[1].hit_tokens == 7            # L-1 of the 8-token prompt
+
+
+# ---------------------------------------------------------------------------
+# recolor / resplit under active shared pages (pinning)
+# ---------------------------------------------------------------------------
+
+def _plan(sm_be=0.3, ch_be=0.25, C=4):
+    ls, be = tuple(range(C - 1)), (C - 1,)
+    return ResourcePlan(sm_be, ch_be, 0.4, ls, be, 1.2)
+
+
+def _colored_engine(cfg, fake_hash_model, controller=None, rows=16):
+    return ServingEngine(
+        max_seq=16, coloring=True, plan=_plan(), paged=True, page_size=PS,
+        hash_model=fake_hash_model, prefix_cache=True,
+        arena_bytes=rows * kv_bytes_per_token(cfg) * 16,
+        slots_ls=3, slots_be=4, controller=controller, control_interval=2)
+
+
+def test_resplit_pins_referenced_shared_pages(tiny_cfg, fake_hash_model):
+    """A mid-run ch_be move with live shared pages: referenced node groups
+    are excluded from the migration (their placement is untouched), and
+    they drain to the new color once their references drop."""
+    eng = _colored_engine(tiny_cfg, fake_hash_model)
+    eng.add_tenant(TenantSpec("ls0", "LS"), tiny_cfg)
+    rt = eng.tenants["ls0"]
+    prompt = np.arange(8, dtype=np.int32)
+    eng.submit("ls0", prompt, max_new=8)
+    eng.step()                                 # A admitted, pages donated
+    eng.submit("ls0", prompt, max_new=8)       # B shares A's prefix pages
+    eng.step()
+    pinned = rt.prefix.pinned_names()
+    assert pinned, "no live shared pages to pin"
+    arena = eng.arena
+    placed = {n: arena.page_channel[arena.allocations[n].spt].copy()
+              for n in pinned}
+    eng.apply_plan(_plan(0.3, 0.5))            # pure channel move
+    for n in pinned:                           # pinned: placement untouched
+        np.testing.assert_array_equal(
+            arena.page_channel[arena.allocations[n].spt], placed[n])
+    assert eng.transitions[-1]["pinned_groups"] == len(pinned)
+    eng.run_until_idle()                       # refs drop at eviction
+    drain = rt.prefix.drain_recolor()
+    live = [n for n in pinned if n in arena.allocations]
+    assert set(drain) >= set(live)             # now migratable
+    arena.resplit(drain)
+    for n in drain:
+        if n in arena.allocations:
+            assert arena.isolation_violations(arena.allocations[n]) == 0
+
+
+def test_prefix_cache_with_online_controller(tiny_cfg, fake_hash_model):
+    """Acceptance interop: a tidal online run with prefix_cache=True
+    completes with full LS SLO attainment, and no shared page is migrated
+    while referenced (every resplit call excludes referenced node groups)."""
+    ctrl = OnlineController(tidal_frontier(_plan(), 4), idle_patience=1)
+    eng = _colored_engine(tiny_cfg, fake_hash_model, controller=ctrl)
+    eng.add_tenant(TenantSpec("ls0", "LS", slo_ms=300_000.0), tiny_cfg)
+    eng.add_tenant(TenantSpec("be0", "BE"), tiny_cfg)
+    arena = eng.arena
+    real_resplit = arena.resplit
+
+    def checked_resplit(mapping, pinned=()):
+        for rt in eng.tenants.values():
+            if rt.prefix is None:
+                continue
+            for name in rt.prefix.pinned_names():
+                assert name not in mapping, \
+                    f"{name} migrated while referenced"
+        return real_resplit(mapping, pinned=pinned)
+
+    arena.resplit = checked_resplit
+    rng = np.random.default_rng(2)
+    base = rng.integers(0, 100, 8)
+    # two tides with idle troughs between them: lending, snap-back, resplit
+    for wave in range(2):
+        for _ in range(2):
+            eng.submit("ls0", np.concatenate(
+                [base, rng.integers(0, 100, 2)]), max_new=3)
+        for _ in range(4):
+            eng.submit("be0", np.concatenate(
+                [base, rng.integers(0, 100, 2)]), max_new=6)
+        eng.run_until_idle()
+    m = eng.metrics()
+    assert m["ls0"]["completed"] == 4 and m["be0"]["completed"] == 8
+    assert m["_class"]["LS"]["slo_attainment"] == 1.0
+    assert eng.transitions, "controller never re-planned"
+    assert m["_online"]["migrated_bytes"] == eng.migrated_bytes
+    hits = (m["ls0"]["prefix_cache"]["hits"]
+            + m["be0"]["prefix_cache"]["hits"])
+    assert hits > 0, "shared-prefix workload produced no cache hits"
