@@ -182,6 +182,13 @@ def run_jax(out, rows, frontier_plan, *, n_ls=3, n_be=10, max_new_be=16,
             "be_peak_active": m["be0"]["peak_active"],
             "ls_completed": m["ls0"]["completed"],
             "ls_slo_attainment": m["_class"]["LS"]["slo_attainment"],
+            # latency split by phase: admission+prefill (TTFT) vs decode
+            # cadence (TBT) — the signal the chunked-prefill scheduler's
+            # prefill_budget knob acts on
+            "ls_ttft": m["_class"]["LS"]["ttft"],
+            "ls_tbt": m["_class"]["LS"]["tbt"],
+            "be_ttft": m["_class"]["BE"]["ttft"],
+            "be_tbt": m["_class"]["BE"]["tbt"],
             "transitions": len(eng.transitions),
             "pages_moved": sum(t["pages_moved"] for t in eng.transitions),
         }

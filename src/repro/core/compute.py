@@ -29,6 +29,12 @@ class LoadSignal:
     ls_active: int = 0          # LS requests currently holding a slot
     ls_slots: int = 1           # max LS concurrency (normalises the load)
     ls_slo_attainment: Optional[float] = None   # over the window, or None
+    # windowed latency split by phase: p99 time-to-first-token (admission +
+    # prefill — what a monolithic co-located prefill inflates) and p99
+    # time-between-tokens (decode cadence — what chunked prefill protects);
+    # None when the window produced no sample
+    ls_ttft_p99_ms: Optional[float] = None
+    ls_tbt_p99_ms: Optional[float] = None
     window_s: float = 0.0
 
     @property

@@ -54,6 +54,11 @@ class ResourcePlan:
     ls_channels: tuple
     be_channels: tuple
     max_ls_inflation: float
+    # BE prefill tokens per engine quantum (None = unthrottled): the
+    # serving scheduler's chunked-prefill throttle, so a plan can slow BE
+    # prompt processing — the co-location that inflates LS TBT — without
+    # also cutting BE's SM share or decode cadence
+    prefill_budget: Optional[int] = None
 
 
 def memory_bound_ops(cfg: ModelConfig, B: int, S: int, mode: str,
@@ -93,7 +98,8 @@ def grid_search(dev: DeviceSpec, ls_cfgs: Sequence[ModelConfig],
                 ch_grid=(1 / 6, 1 / 4, 1 / 3, 1 / 2),
                 thres_grid=(0.2, 0.4, 0.6),
                 pairs_per_model: int = 6, seed: int = 0,
-                ls_concurrency: int = 1) -> ResourcePlan:
+                ls_concurrency: int = 1,
+                prefill_budget: Optional[int] = None) -> ResourcePlan:
     rng = np.random.default_rng(seed)
     ls_pool = [k for cfg in ls_cfgs
                for k in request_kernels(cfg, 1, 128, "prefill", dev)]
@@ -124,7 +130,7 @@ def grid_search(dev: DeviceSpec, ls_cfgs: Sequence[ModelConfig],
         sm_be=sm_be, ch_be=ch_be, thres_dram=thres,
         ls_channels=tuple(range(dev.num_channels - n_be)),
         be_channels=tuple(range(dev.num_channels - n_be, dev.num_channels)),
-        max_ls_inflation=worst)
+        max_ls_inflation=worst, prefill_budget=prefill_budget)
 
 
 # ---------------------------------------------------------------------------
@@ -175,7 +181,8 @@ def lending_plan(base: ResourcePlan,
     co-runs under this plan, so the recorded inflation is 1x by definition."""
     C = num_channels or (len(base.ls_channels) + len(base.be_channels))
     return replace(base, sm_be=1.0, ch_be=1.0,
-                   be_channels=tuple(range(C)), max_ls_inflation=1.0)
+                   be_channels=tuple(range(C)), max_ls_inflation=1.0,
+                   prefill_budget=None)
 
 
 def tidal_frontier(plan: ResourcePlan,
@@ -194,13 +201,18 @@ def frontier_search(dev: DeviceSpec, ls_cfgs: Sequence[ModelConfig],
                     sm_grid=(0.1, 0.2, 0.3, 0.4, 0.5),
                     ch_grid=(1 / 6, 1 / 4, 1 / 3, 1 / 2),
                     thres_grid=(0.2, 0.4, 0.6),
-                    pairs_per_model: int = 6, seed: int = 0) -> PlanFrontier:
+                    pairs_per_model: int = 6, seed: int = 0,
+                    prefill_budget: Optional[int] = None) -> PlanFrontier:
     """Offline phase of the online control plane: one grid search per LS-load
     regime. A regime at ``load`` is evaluated with ``round(load *
     max_concurrency)`` concurrent LS kernels in the pairwise-inflation
     constraint, so the feasible set shrinks as load grows; the zero-load
     regime is the analytic :func:`lending_plan` (no search needed — there is
-    nothing to protect)."""
+    nothing to protect). ``prefill_budget`` attaches the serving scheduler's
+    BE-prefill-tokens-per-quantum throttle to every *contended* regime (the
+    lending plan stays unthrottled), so a tidal re-plan tightens BE prompt
+    processing — the TBT hazard — together with BE's SM share, and releases
+    both when LS ebbs."""
     entries: List[Tuple[float, ResourcePlan]] = []
     for load in sorted(set(load_grid)):
         assert load > 0, "load 0 is the lending plan; keep it off load_grid"
@@ -209,7 +221,8 @@ def frontier_search(dev: DeviceSpec, ls_cfgs: Sequence[ModelConfig],
                            max_inflation=max_inflation, sm_grid=sm_grid,
                            ch_grid=ch_grid, thres_grid=thres_grid,
                            pairs_per_model=pairs_per_model, seed=seed,
-                           ls_concurrency=conc)
+                           ls_concurrency=conc,
+                           prefill_budget=prefill_budget)
         entries.append((load, plan))
     entries.insert(0, (0.0, lending_plan(entries[-1][1], dev.num_channels)))
     return PlanFrontier(entries)

@@ -176,7 +176,8 @@ def layer_costs(cfg: ModelConfig, B, Sq, Skv, kind, moe_layer: bool,
 
 
 def model_costs(cfg: ModelConfig, B: int, S: int, mode: str,
-                kv_write=None, prefix: int = 0) -> List[OpCost]:
+                kv_write=None, prefix: int = 0,
+                chunk=None) -> List[OpCost]:
     """mode: train | prefill | decode. decode: Sq=1, Skv=S. train adds
     backward (2x fwd flops for grads) via the TRAIN_MULT on the caller side —
     here we return FORWARD costs; see step_costs(). ``kv_write`` (decode
@@ -186,9 +187,28 @@ def model_costs(cfg: ModelConfig, B: int, S: int, mode: str,
     leading prompt tokens whose KV is already resident (a prefix-cache hit):
     only the uncached suffix is computed (Sq = S - prefix) while attention
     still reads the full Skv = S window — the traffic/FLOPs saving the
-    radix-tree page sharing buys."""
+    radix-tree page sharing buys. ``chunk`` (prefill only) models *chunked*
+    prefill: the uncached span is computed ``chunk`` query tokens at a time,
+    each chunk re-reading its prefix KV and the layer weights — the
+    chunking bandwidth tax the serving scheduler pays for bounded TBT. The
+    op list concatenates the per-chunk costs, so the planner sees both the
+    tax and the per-chunk preemption granularity."""
     if mode == "prefill" and prefix:
         prefix = min(int(prefix), max(S - 1, 0))
+    else:
+        prefix = 0
+    if mode == "prefill" and chunk and prefix + chunk < S:
+        ops: List[OpCost] = []
+        start = prefix
+        while start < S:
+            end = min(start + int(chunk), S)
+            # one chunk = a prefill of [start, end) over an end-token KV
+            # window: attention reads the start-token prefix again
+            ops += model_costs(cfg, B, end, "prefill",
+                               prefix=start if start else 0)
+            start = end
+        return ops
+    if mode == "prefill" and prefix:
         Sq, Skv = S - prefix, S
     else:
         Sq, Skv = (1, S) if mode == "decode" else (S, S)

@@ -50,14 +50,26 @@ class Kernel:
 
 def request_kernels(cfg: ModelConfig, B: int, S: int, mode: str,
                     dev: DeviceSpec, max_kernels: int = 24,
-                    kv_write=None, prefix: int = 0) -> List[Kernel]:
-    ops = model_costs(cfg, B, S, mode, kv_write=kv_write, prefix=prefix)
-    per = max(1, len(ops) // max_kernels)
+                    kv_write=None, prefix: int = 0,
+                    chunk=None) -> List[Kernel]:
+    """``chunk`` (prefill only) models chunked prefill: the op stream is
+    coalesced into one kernel per prompt chunk — each kernel carries the
+    chunk's re-read tax from the cost model, and the kernel boundary is the
+    simulator's preemption point (the engine-quantum analogue), which is
+    what lets a co-scheduled LS tenant interleave mid-prompt."""
+    ops = model_costs(cfg, B, S, mode, kv_write=kv_write, prefix=prefix,
+                      chunk=chunk)
+    span = max(S - min(int(prefix), max(S - 1, 0)), 1)
+    if chunk and mode == "prefill" and chunk < span:
+        n_chunks = -(-span // int(chunk))
+        per = max(1, len(ops) // n_chunks)
+    else:
+        per = max(1, len(ops) // max_kernels)
     out: List[Kernel] = []
     for i in range(0, len(ops), per):
-        chunk = ops[i:i + per]
-        f = sum(o.flops for o in chunk)
-        b = sum(o.bytes for o in chunk)
+        grp = ops[i:i + per]
+        f = sum(o.flops for o in grp)
+        b = sum(o.bytes for o in grp)
         out.append(Kernel(f, b, b / dev.hbm_bw > f / dev.peak_flops))
     return out
 
@@ -69,6 +81,12 @@ class Tenant:
     kernels: List[Kernel]      # one request's kernel sequence
     arrivals: Optional[List[float]] = None   # LS: request arrival times
     closed_loop: bool = False  # BE: always another request
+    # chunked-prefill phase mark: the first ``prefill_kernels`` kernels are
+    # the request's prompt-processing phase (one kernel per prefill chunk
+    # when the engine chunks); kernels past it are decode steps, so the
+    # simulator can report TTFT (prefill-phase completion) and TBT
+    # (decode-kernel completion gaps) per request
+    prefill_kernels: Optional[int] = None
     # runtime state
     queue: List[float] = field(default_factory=list)
     k_idx: int = 0
@@ -78,6 +96,9 @@ class Tenant:
     suspended: bool = False      # temporal multiplexing: preempted mid-request
     latencies: List[float] = field(default_factory=list)
     completed: int = 0
+    ttfts: List[float] = field(default_factory=list)
+    tbt_gaps: List[float] = field(default_factory=list)
+    _last_tok_t: float = 0.0
 
     @property
     def is_ls(self):
@@ -179,6 +200,7 @@ class GPUSimulator:
             tn.k_idx, tn.active_since, tn.suspended = 0, None, False
             tn.cur_remaining = 1.0
             tn.latencies, tn.completed = [], 0
+            tn.ttfts, tn.tbt_gaps = [], []
 
         def eligible(tn, now):
             # 1ns admission tolerance: a control-tick boundary landing an
@@ -285,6 +307,15 @@ class GPUSimulator:
                 if tn.cur_remaining <= 1e-9:
                     tn.k_idx += 1
                     tn.cur_remaining = 1.0
+                    # phase marks: prefill-phase completion is the request's
+                    # TTFT; decode-kernel completion gaps are its TBT
+                    if tn.prefill_kernels is not None:
+                        if tn.k_idx == tn.prefill_kernels:
+                            tn.ttfts.append(t - tn.cur_started)
+                            tn._last_tok_t = t
+                        elif tn.k_idx > tn.prefill_kernels:
+                            tn.tbt_gaps.append(t - tn._last_tok_t)
+                            tn._last_tok_t = t
                     if tn.k_idx >= len(tn.kernels):
                         tn.latencies.append(t - tn.cur_started)
                         tn.completed += 1
@@ -323,6 +354,19 @@ class SimResult:
     def be_throughput(self, batch: int = 1) -> float:
         done = sum(tn.completed for tn in self.tenants if not tn.is_ls)
         return done * batch / max(self.horizon, 1e-9)
+
+    def ls_ttft_p99(self) -> float:
+        """p99 prefill-phase completion time over LS tenants carrying a
+        ``prefill_kernels`` phase mark (NaN without samples)."""
+        ts = [x for tn in self.tenants if tn.is_ls for x in tn.ttfts]
+        return float(np.percentile(ts, 99)) if ts else float("nan")
+
+    def ls_tbt_p99(self) -> float:
+        """p99 decode inter-kernel gap over LS tenants (NaN without
+        samples) — the simulator-side TBT the chunked BE prefill is meant
+        to protect."""
+        gs = [x for tn in self.tenants if tn.is_ls for x in tn.tbt_gaps]
+        return float(np.percentile(gs, 99)) if gs else float("nan")
 
 
 # ---------------------------------------------------------------------------

@@ -10,6 +10,8 @@ import jax
 from .flash_attention import flash_attention as _flash
 from .decode_attention import (decode_attention as _decode,
                                decode_attention_paged as _decode_paged)
+from .prefill_attention import (prefill_attention as _prefill,
+                                prefill_attention_paged as _prefill_paged)
 from .spt_gather import spt_gather as _gather, spt_scatter as _scatter
 from .dual_tenant_matmul import dual_tenant_matmul as _dtm
 from .ssd_scan import ssd_scan as _ssd
@@ -44,6 +46,22 @@ def decode_attention_paged(q, k_pages, v_pages, page_table, pos, *,
     interpret = _interpret_default() if interpret is None else interpret
     return _decode_paged(q, k_pages, v_pages, page_table, pos,
                          interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def prefill_attention(q, k_cache, v_cache, pos, *, block_k=128,
+                      interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _prefill(q, k_cache, v_cache, pos, block_k=block_k,
+                    interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def prefill_attention_paged(q, k_pages, v_pages, page_table, pos, *,
+                            interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _prefill_paged(q, k_pages, v_pages, page_table, pos,
+                          interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

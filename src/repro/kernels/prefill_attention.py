@@ -1,0 +1,191 @@
+"""Chunked-prefill flash attention (TPU Pallas): an Sq-token prompt chunk
+per row attends to its cached-context window — the kernel behind the serving
+engine's chunked prefill and batched prefix-cache suffix replay.
+
+Two entry points share one online-softmax kernel body (the chunk-width
+generalisation of ``decode_attention``):
+
+``prefill_attention``        dense KV-major cache [B,Hkv,Smax,D] with
+                             per-row chunk start positions ``pos`` [B]:
+                             the query at pos+i sees keys <= pos+i.
+``prefill_attention_paged``  page-pool cache [n_pages,Hkv,page,D] addressed
+                             through a per-row page table (the serving
+                             engine's PagedKVCache layout; no dense gather
+                             is materialized).
+
+The chunk's own K/V must already be resident in the cache (the jnp-side
+scatter in ``models.attention`` runs before the call). All query heads AND
+chunk positions of one KV head are flattened into one [Sq*G, D] MXU operand;
+the causal mask is per flattened row (``k_pos <= pos[b] + row // G``).
+Ragged early-exit as in decode: kv blocks past a row's last chunk position
+are index-map-pinned and compute-predicated off, so per-row cost scales with
+``pos + Sq``, not ``Smax``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .pallas_compat import CompilerParams
+
+NEG_INF = -1e30
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, block_k, sq, group):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # early exit past the chunk's last query position (pos + sq - 1)
+    @pl.when(ki <= (pos_ref[b] + sq - 1) // block_k)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # [Sq*G, D]
+        k = k_ref[0, 0].astype(jnp.float32)                  # [bk, D]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [Sq*G, bk]
+        k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        q_pos = pos_ref[b] + jax.lax.broadcasted_iota(jnp.int32, s.shape,
+                                                      0) // group
+        s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _fin():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def _paged_kernel(pt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                  acc_scr, *, scale, block_k, sq, group):
+    # the page table is consumed by the BlockSpec index maps only
+    del pt_ref
+    _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            scale=scale, block_k=block_k, sq=sq, group=group)
+
+
+def prefill_attention(q, k_cache, v_cache, pos, *, block_k=128,
+                      interpret=False):
+    """q: [B,Sq,H,D] (one prompt chunk per row); caches: KV-major
+    [B,Hkv,Smax,D] with the chunk's keys/values already written; pos: [B]
+    int32 chunk start positions (query i of row b sits at pos[b]+i).
+    Returns [B,Sq,H,D]."""
+    B, Sq, H, D = q.shape
+    Hkv, Smax = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    block_k = min(block_k, Smax)
+    kt, vt = k_cache, v_cache
+    if Smax % block_k:
+        # same block-divisor policy as decode_attention: prefer a decent
+        # divisor, pad only pathological windows
+        d = block_k
+        while Smax % d:
+            d -= 1
+        if d >= 32:
+            block_k = d
+        else:
+            pad = block_k - Smax % block_k
+            kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            Smax += pad
+    qg = q.reshape(B, Sq, Hkv, G, D).transpose(0, 2, 1, 3, 4) \
+          .reshape(B, Hkv, Sq * G, D)
+    pos_arr = jnp.asarray(pos, jnp.int32)
+
+    def _kv_index(b, h, j, pos):
+        return (b, h, jnp.minimum(j, (pos[b] + Sq - 1) // block_k), 0)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=D ** -0.5, block_k=block_k, sq=Sq,
+                          group=G),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, Sq * G, D), q.dtype),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, Hkv, Smax // block_k),
+            in_specs=[
+                pl.BlockSpec((1, 1, Sq * G, D),
+                             lambda b, h, j, pos: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, block_k, D), _kv_index),
+                pl.BlockSpec((1, 1, block_k, D), _kv_index),
+            ],
+            out_specs=pl.BlockSpec((1, 1, Sq * G, D),
+                                   lambda b, h, j, pos: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((Sq * G, 1), jnp.float32),
+                pltpu.VMEM((Sq * G, 1), jnp.float32),
+                pltpu.VMEM((Sq * G, D), jnp.float32),
+            ]),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(pos_arr, qg, kt, vt)
+    return out.reshape(B, Hkv, Sq, G, D).transpose(0, 2, 1, 3, 4) \
+              .reshape(B, Sq, H, D)
+
+
+def prefill_attention_paged(q, k_pages, v_pages, page_table, pos, *,
+                            interpret=False):
+    """Paged chunked-prefill flash attention: each row's kv blocks are
+    gathered through its page table inside the BlockSpec index map (one page
+    = one kv block, no dense window view).
+
+    q: [B,Sq,H,D]; {k,v}_pages: [n_pages,Hkv,page_size,D]; page_table:
+    [B,P] int32 (entries >= n_pages unmapped — never touched, the index map
+    clamps to the row's last valid page); pos: [B] int32 chunk starts.
+    Returns [B,Sq,H,D]."""
+    B, Sq, H, D = q.shape
+    n_pages, Hkv, page_size, _ = k_pages.shape
+    P = page_table.shape[1]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D).transpose(0, 2, 1, 3, 4) \
+          .reshape(B, Hkv, Sq * G, D)
+    pos_arr = jnp.asarray(pos, jnp.int32)
+    pt = jnp.asarray(page_table, jnp.int32)
+
+    def _kv_index(b, h, j, pt, pos):
+        jj = jnp.minimum(j, (pos[b] + Sq - 1) // page_size)
+        return (jnp.minimum(pt[b, jj], n_pages - 1), h, 0, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, scale=D ** -0.5, block_k=page_size,
+                          sq=Sq, group=G),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, Sq * G, D), q.dtype),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, Hkv, P),
+            in_specs=[
+                pl.BlockSpec((1, 1, Sq * G, D),
+                             lambda b, h, j, pt, pos: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, page_size, D), _kv_index),
+                pl.BlockSpec((1, 1, page_size, D), _kv_index),
+            ],
+            out_specs=pl.BlockSpec((1, 1, Sq * G, D),
+                                   lambda b, h, j, pt, pos: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((Sq * G, 1), jnp.float32),
+                pltpu.VMEM((Sq * G, 1), jnp.float32),
+                pltpu.VMEM((Sq * G, D), jnp.float32),
+            ]),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(pt, pos_arr, qg, k_pages, v_pages)
+    return out.reshape(B, Hkv, Sq, G, D).transpose(0, 2, 1, 3, 4) \
+              .reshape(B, Sq, H, D)

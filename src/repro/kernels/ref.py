@@ -45,6 +45,35 @@ def ref_decode_attention(q, k_cache, v_cache, pos):
     return jnp.einsum("bhk,bkhd->bhd", w, vr).astype(q.dtype)
 
 
+def ref_prefill_attention(q, k_cache, v_cache, pos):
+    """Chunked-prefill oracle. q: [B,Sq,H,D]; caches: [B,Smax,Hkv,D]
+    (the chunk's own keys already resident); pos: [B] chunk starts — query
+    i of row b attends to cache positions <= pos[b] + i."""
+    B, Sq, H, D = q.shape
+    Smax, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    kr = jnp.repeat(k_cache, G, axis=2).astype(jnp.float32)
+    vr = jnp.repeat(v_cache, G, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kr) * D ** -0.5
+    q_pos = jnp.asarray(pos)[:, None] + jnp.arange(Sq)[None, :]   # [B,Sq]
+    valid = jnp.arange(Smax)[None, None, :] <= q_pos[:, :, None]  # [B,Sq,S]
+    s = jnp.where(valid[:, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, vr).astype(q.dtype)
+
+
+def ref_prefill_attention_paged(q, k_pages, v_pages, page_table, pos):
+    """Paged chunked-prefill oracle: dense per-row gather, then defer."""
+    n_pages, Hkv, ps, D = k_pages.shape
+    B, P = page_table.shape
+    pt = jnp.clip(page_table, 0, n_pages - 1)
+    kd = jnp.take(k_pages, pt, axis=0)            # [B,P,Hkv,ps,D]
+    vd = jnp.take(v_pages, pt, axis=0)
+    kd = kd.transpose(0, 1, 3, 2, 4).reshape(B, P * ps, Hkv, D)
+    vd = vd.transpose(0, 1, 3, 2, 4).reshape(B, P * ps, Hkv, D)
+    return ref_prefill_attention(q, kd, vd, pos)
+
+
 def ref_decode_attention_paged(q, k_pages, v_pages, page_table, pos):
     """Paged oracle: gather each row's pages into a dense [B,S,Hkv,D] view
     and defer to ``ref_decode_attention``."""

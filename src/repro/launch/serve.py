@@ -39,6 +39,16 @@ def main():
                          "(implies --paged)")
     ap.add_argument("--use-flash", action="store_true",
                     help="ragged Pallas flash-decode (interpret off-TPU)")
+    ap.add_argument("--chunk-size", type=int, default=None,
+                    help="chunked prefill: max prompt tokens one request "
+                         "advances per engine quantum, so a long prompt "
+                         "prefills across quanta while decode keeps "
+                         "ticking (bounds the co-located TBT spike; "
+                         "default: whole prompt per quantum)")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="per-class per-quantum token budget for the "
+                         "scheduler: decode tokens first, prefill chunks "
+                         "fill the remainder (default: unbounded)")
     ap.add_argument("--grid-search", action="store_true",
                     help="derive a ResourcePlan offline and thread it in")
     ap.add_argument("--online", action="store_true",
@@ -89,6 +99,7 @@ def main():
         backend=args.backend, plan=plan, coloring=args.coloring,
         paged=args.paged or args.prefix_cache, page_size=args.page_size,
         prefix_cache=args.prefix_cache, use_flash=args.use_flash,
+        chunk_size=args.chunk_size, token_budget=args.token_budget,
         slots_ls=args.slots, slots_be=args.slots, device=args.gpu
         if args.gpu in GPU_DEVICES else "tpu-v5e",
         controller=ctrl, control_interval=args.control_interval,

@@ -177,35 +177,59 @@ def gqa_forward(p, x, cfg, *, layer_kind="global", positions=None, causal=True):
 
 def _decode_core(q, cache_k, cache_v, positions, cfg, layer_kind, x_dtype,
                  *, use_flash=False):
-    """Shared decode attention core over a dense KV window. q: [B,1,H,Dh];
-    cache_{k,v}: [B,Hkv,S,Dh] (KV-major); positions: [B,1]. When
-    ``use_flash`` is set (and the layer has no softcap/local window, which
-    the Pallas kernel doesn't implement) the ragged flash-decode kernel
-    replaces the jnp einsum core — same contract, per-row early exit."""
-    B, _, H, Dh = q.shape
+    """Shared cached-context attention core over a dense KV window.
+    q: [B,Sq,H,Dh] (Sq == 1 for decode, a token chunk for chunked prefill);
+    cache_{k,v}: [B,Hkv,S,Dh] (KV-major); positions: [B,Sq] — each query row
+    attends to cached positions <= its own. When ``use_flash`` is set (and
+    the layer has no softcap/local window, which the Pallas kernels don't
+    implement) the ragged flash kernels replace the jnp einsum core — the
+    decode kernel for one-token rows, the chunked-prefill kernel otherwise —
+    same contract, per-row early exit."""
+    B, Sq, H, Dh = q.shape
     Hkv, S = cache_k.shape[1], cache_k.shape[2]
     G = H // Hkv
     window = cfg.local_window if layer_kind == "local" else None
     if use_flash and not cfg.attn_logit_softcap and not window:
         from ..kernels import ops as kops    # lazy: keep pallas off cold paths
-        out = kops.decode_attention(q[:, 0], cache_k, cache_v,
-                                    positions[:, 0].astype(jnp.int32),
-                                    kv_layout="bhsd")
-        return out[:, None].astype(x_dtype)
-    kv_pos = jnp.arange(S)[None, :]
-    valid = kv_pos <= positions                     # [B, S]
+        if Sq == 1:
+            out = kops.decode_attention(q[:, 0], cache_k, cache_v,
+                                        positions[:, 0].astype(jnp.int32),
+                                        kv_layout="bhsd")
+            return out[:, None].astype(x_dtype)
+        out = kops.prefill_attention(q, cache_k, cache_v,
+                                     positions[:, 0].astype(jnp.int32))
+        return out.astype(x_dtype)
+    kv_pos = jnp.arange(S)[None, None, :]
+    valid = kv_pos <= positions[:, :, None]         # [B, Sq, S]
     if window:
-        valid &= kv_pos > positions - window
-    qg = q.reshape(B, 1, Hkv, G, Dh)
+        valid &= kv_pos > positions[:, :, None] - window
+    qg = q.reshape(B, Sq, Hkv, G, Dh)
     scores = jnp.einsum("bqhgd,bhkd->bhgqk", qg, cache_k,
                         preferred_element_type=jnp.float32) * (Dh ** -0.5)
     if cfg.attn_logit_softcap:
         scores = softcap(scores, cfg.attn_logit_softcap)
-    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgqk,bhkd->bqhgd", w.astype(cache_v.dtype), cache_v,
                      preferred_element_type=jnp.float32)
-    return out.reshape(B, 1, H, Dh).astype(x_dtype)
+    return out.reshape(B, Sq, H, Dh).astype(x_dtype)
+
+
+def _chunk_scatter(cache, new, pos, *, axis):
+    """Scatter a contiguous Sq-token chunk into the cache's sequence axis at
+    per-row start positions ``pos`` [B] (new: cache-shaped on every axis but
+    ``axis``, where it carries Sq entries). Rows whose positions fall outside
+    the window write nothing — the vector-``pos`` analogue of the decode
+    paths' drop-out-of-range contract, so a sentinel ``pos >= Smax`` masks a
+    row out of the batched call entirely."""
+    Smax, Sq = cache.shape[axis], new.shape[axis]
+    idx = jnp.arange(Smax)[None, :] - pos[:, None]            # [B, Smax]
+    sel = (idx >= 0) & (idx < Sq)
+    shape = [1] * cache.ndim
+    shape[0], shape[axis] = idx.shape[0], Smax
+    gather = jnp.clip(idx, 0, Sq - 1).reshape(shape)
+    src = jnp.take_along_axis(new, gather, axis=axis)
+    return jnp.where(sel.reshape(shape), src, cache)
 
 
 def gqa_decode(p, x, cfg, cache_k, cache_v, pos, *, layer_kind="global",
@@ -247,14 +271,45 @@ def gqa_decode(p, x, cfg, cache_k, cache_v, pos, *, layer_kind="global",
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache_k, cache_v
 
 
+def gqa_prefill_step(p, x, cfg, cache_k, cache_v, pos, *, layer_kind="global",
+                     use_flash=False):
+    """Cached-context chunked prefill over the dense slot cache.
+
+    x: [B,Sq,D] — an Sq-token prompt chunk per row, starting at per-row cache
+    position ``pos`` [B]; cache_{k,v}: [B,Hkv,Smax,Dh] (KV-major). The
+    chunk's K/V are scattered into the window first, then each query at
+    pos+i attends to the pos+i cached prefix (earlier chunks / a shared
+    prefix) plus the chunk itself — the primitive behind both chunked
+    prefill and batched prefix-cache suffix replay. Rows with ``pos >=
+    Smax`` write nothing and their outputs are garbage (the scheduler's
+    masked-row convention). An Sq == 1 call is shape-identical to
+    :func:`gqa_decode`'s vector-``pos`` path, which is what makes the
+    scheduler's final one-token chunk bit-equal to the seed's
+    scan-of-decode-steps prefill. Returns (out [B,Sq,D], new caches)."""
+    B, Sq, _ = x.shape
+    positions = pos[:, None] + jnp.arange(Sq)[None, :]        # [B, Sq]
+    q, k, v = _proj_qkv(p, x, cfg, positions)
+    kt = k.transpose(0, 2, 1, 3).astype(cache_k.dtype)        # [B,Hkv,Sq,Dh]
+    vt = v.transpose(0, 2, 1, 3).astype(cache_v.dtype)
+    cache_k = _chunk_scatter(cache_k, kt, pos, axis=2)
+    cache_v = _chunk_scatter(cache_v, vt, pos, axis=2)
+    out = _decode_core(q, cache_k, cache_v, positions, cfg, layer_kind,
+                       x.dtype, use_flash=use_flash)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache_k, cache_v
+
+
 def _page_lookup(page_table, positions, ps, n_pages):
-    """(physical page, in-page offset) per row for an append at
-    ``positions``; unmapped entries land on the ``n_pages`` sentinel so a
-    ``mode="drop"`` scatter writes nothing."""
-    logical = positions[:, 0] // ps
-    off = positions[:, 0] % ps
-    phys = jnp.take_along_axis(page_table, logical[:, None], axis=1)[:, 0]
-    return jnp.where(phys < 0, n_pages, phys), off
+    """(physical page, in-page offset) per (row, token) for an append at
+    ``positions`` [B,Q]; unmapped entries — negative table slots or logical
+    pages past the table — land on the ``n_pages`` sentinel so a
+    ``mode="drop"`` scatter writes nothing (an out-of-table position must
+    never clamp onto a live — possibly shared — page)."""
+    P = page_table.shape[1]
+    logical = positions // ps
+    off = positions % ps
+    phys = jnp.take_along_axis(page_table, jnp.clip(logical, 0, P - 1),
+                               axis=1)
+    return jnp.where((phys < 0) | (logical >= P), n_pages, phys), off
 
 
 def gqa_decode_paged(p, x, cfg, k_pages, v_pages, page_table, pos, *,
@@ -282,9 +337,9 @@ def gqa_decode_paged(p, x, cfg, k_pages, v_pages, page_table, pos, *,
     q, k, v = _proj_qkv(p, x, cfg, positions)       # k,v: [B,1,Hkv,Dh]
     phys, off = _page_lookup(page_table, positions, ps, n_pages)
     k_pages = k_pages.at[phys, :, off, :].set(
-        k[:, 0].astype(k_pages.dtype), mode="drop")
+        k.astype(k_pages.dtype), mode="drop")
     v_pages = v_pages.at[phys, :, off, :].set(
-        v[:, 0].astype(v_pages.dtype), mode="drop")
+        v.astype(v_pages.dtype), mode="drop")
     if use_flash and not cfg.attn_logit_softcap and \
             not (layer_kind == "local" and cfg.local_window):
         from ..kernels import ops as kops
@@ -292,6 +347,44 @@ def gqa_decode_paged(p, x, cfg, k_pages, v_pages, page_table, pos, *,
             q[:, 0], k_pages, v_pages, page_table,
             positions[:, 0].astype(jnp.int32))
         out = out[:, None].astype(x.dtype)
+    else:
+        pt = jnp.clip(page_table, 0, n_pages - 1)
+        kd = jnp.take(k_pages, pt, axis=0)          # [B,P,Hkv,ps,Dh]
+        vd = jnp.take(v_pages, pt, axis=0)
+        kd = kd.transpose(0, 2, 1, 3, 4).reshape(B, Hkv, P * ps, Dh)
+        vd = vd.transpose(0, 2, 1, 3, 4).reshape(B, Hkv, P * ps, Dh)
+        out = _decode_core(q, kd, vd, positions, cfg, layer_kind, x.dtype)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), k_pages, v_pages
+
+
+def gqa_prefill_paged(p, x, cfg, k_pages, v_pages, page_table, pos, *,
+                      layer_kind="global", use_flash=False):
+    """Cached-context chunked prefill against a paged KV cache: the paged
+    counterpart of :func:`gqa_prefill_step` (and the batched replacement for
+    the prefix cache's one-token-per-step suffix replay).
+
+    x: [B,Sq,D]; pools/page_table as in :func:`gqa_decode_paged`; pos: [B]
+    chunk start positions. The Sq appends scatter one (page, offset) entry
+    per token (rows with unmapped or out-of-table positions drop); the read
+    side gathers the per-row window — through the chunked-prefill Pallas
+    kernel's BlockSpec index map under ``use_flash``, or a dense window view
+    in the jnp correctness path. Returns (out [B,Sq,D], new pools)."""
+    B, Sq, _ = x.shape
+    n_pages, Hkv, ps, Dh = k_pages.shape
+    P = page_table.shape[1]
+    positions = pos[:, None] + jnp.arange(Sq)[None, :]        # [B, Sq]
+    q, k, v = _proj_qkv(p, x, cfg, positions)       # k,v: [B,Sq,Hkv,Dh]
+    phys, off = _page_lookup(page_table, positions, ps, n_pages)
+    k_pages = k_pages.at[phys, :, off, :].set(
+        k.astype(k_pages.dtype), mode="drop")
+    v_pages = v_pages.at[phys, :, off, :].set(
+        v.astype(v_pages.dtype), mode="drop")
+    if use_flash and not cfg.attn_logit_softcap and \
+            not (layer_kind == "local" and cfg.local_window):
+        from ..kernels import ops as kops
+        out = kops.prefill_attention_paged(
+            q, k_pages, v_pages, page_table, pos.astype(jnp.int32))
+        out = out.astype(x.dtype)
     else:
         pt = jnp.clip(page_table, 0, n_pages - 1)
         kd = jnp.take(k_pages, pt, axis=0)          # [B,P,Hkv,ps,Dh]
@@ -357,7 +450,9 @@ def mla_forward(p, x, cfg, *, positions=None, causal=True, **_):
 
 def _mla_core(p, x, cfg, q_nope, q_rope, cache_ckv, cache_krope, positions):
     """Absorbed-matmul attention over a dense latent window. cache_ckv:
-    [B,S,R]; cache_krope: [B,S,rope]; positions: [B,1]."""
+    [B,S,R]; cache_krope: [B,S,rope]; positions: [B,Sq] (Sq == 1 for
+    decode, a token chunk for chunked prefill — each query row attends to
+    latents at positions <= its own)."""
     m = cfg.mla
     Smax = cache_ckv.shape[1]
     q_eff = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["wk_b"])
@@ -366,7 +461,8 @@ def _mla_core(p, x, cfg, q_nope, q_rope, cache_ckv, cache_krope, positions):
                          preferred_element_type=jnp.float32)
               + jnp.einsum("bqhk,bsk->bhqs", q_rope, cache_krope,
                            preferred_element_type=jnp.float32)) * scale
-    valid = (jnp.arange(Smax)[None, :] <= positions)[:, None, None]   # [B,1,1,S]
+    valid = (jnp.arange(Smax)[None, None, :]
+             <= positions[:, :, None])[:, None]               # [B,1,Sq,S]
     scores = jnp.where(valid, scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1)
     o_latent = jnp.einsum("bhqs,bsr->bqhr", w.astype(cache_ckv.dtype),
@@ -410,6 +506,25 @@ def mla_decode(p, x, cfg, cache_ckv, cache_krope, pos, **_):
             cache_ckv, cache_krope)
 
 
+def mla_prefill_step(p, x, cfg, cache_ckv, cache_krope, pos, **_):
+    """Cached-context chunked MLA prefill (absorbed-matmul): the Sq-token
+    chunk's latents are scattered into the dense latent window at per-row
+    start positions ``pos`` [B], then each query attends to its own latent
+    prefix. Returns (out [B,Sq,D], new caches)."""
+    B, Sq, _ = x.shape
+    positions = pos[:, None] + jnp.arange(Sq)[None, :]        # [B, Sq]
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    c_kv, k_rope = _mla_latent(p, x, cfg, positions)
+    cache_ckv = _chunk_scatter(cache_ckv, c_kv.astype(cache_ckv.dtype),
+                               pos, axis=1)
+    cache_krope = _chunk_scatter(cache_krope,
+                                 k_rope.astype(cache_krope.dtype),
+                                 pos, axis=1)
+    return (_mla_core(p, x, cfg, q_nope, q_rope, cache_ckv, cache_krope,
+                      positions),
+            cache_ckv, cache_krope)
+
+
 def mla_decode_paged(p, x, cfg, ckv_pages, krope_pages, page_table, pos, **_):
     """Paged MLA decode: the latent cache lives in a shared page pool.
 
@@ -426,9 +541,34 @@ def mla_decode_paged(p, x, cfg, ckv_pages, krope_pages, page_table, pos, **_):
     c_kv, k_rope = _mla_latent(p, x, cfg, positions)
     phys, off = _page_lookup(page_table, positions, ps, n_pages)
     ckv_pages = ckv_pages.at[phys, off, :].set(
-        c_kv[:, 0].astype(ckv_pages.dtype), mode="drop")
+        c_kv.astype(ckv_pages.dtype), mode="drop")
     krope_pages = krope_pages.at[phys, off, :].set(
-        k_rope[:, 0].astype(krope_pages.dtype), mode="drop")
+        k_rope.astype(krope_pages.dtype), mode="drop")
+    pt = jnp.clip(page_table, 0, n_pages - 1)
+    ckv = jnp.take(ckv_pages, pt, axis=0).reshape(B, P * ps, R)
+    krope = jnp.take(krope_pages, pt, axis=0).reshape(
+        B, P * ps, krope_pages.shape[-1])
+    return (_mla_core(p, x, cfg, q_nope, q_rope, ckv, krope, positions),
+            ckv_pages, krope_pages)
+
+
+def mla_prefill_paged(p, x, cfg, ckv_pages, krope_pages, page_table, pos,
+                      **_):
+    """Cached-context chunked MLA prefill against the paged latent pool:
+    Sq (page, offset) latent appends per row (unmapped positions drop),
+    attention over the per-row gathered window. Returns (out [B,Sq,D],
+    new pools)."""
+    B, Sq, _ = x.shape
+    n_pages, ps, R = ckv_pages.shape
+    P = page_table.shape[1]
+    positions = pos[:, None] + jnp.arange(Sq)[None, :]        # [B, Sq]
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    c_kv, k_rope = _mla_latent(p, x, cfg, positions)
+    phys, off = _page_lookup(page_table, positions, ps, n_pages)
+    ckv_pages = ckv_pages.at[phys, off, :].set(
+        c_kv.astype(ckv_pages.dtype), mode="drop")
+    krope_pages = krope_pages.at[phys, off, :].set(
+        k_rope.astype(krope_pages.dtype), mode="drop")
     pt = jnp.clip(page_table, 0, n_pages - 1)
     ckv = jnp.take(ckv_pages, pt, axis=0).reshape(B, P * ps, R)
     krope = jnp.take(krope_pages, pt, axis=0).reshape(

@@ -193,28 +193,35 @@ def _attn_layer(p, x, cfg, kind, ctx, aux, cache=None, pos=None):
                                  positions=ctx.get("positions"),
                                  causal=ctx.get("causal", True))
     elif "page_table" in ctx:
-        # paged decode: cache leaves are shared page pools, addressed
-        # through the per-row page table (serving engine fast path)
+        # paged cache: leaves are shared page pools, addressed through the
+        # per-row page table (serving engine fast path); ``ctx["chunk"]``
+        # switches one-token decode to the cached-context chunked prefill
+        # contract (Sq prompt tokens per row at per-row start positions)
         pt = ctx["page_table"]
+        chunk = ctx.get("chunk", False)
         if cfg.attn_type == "mla":
-            a, ckv, kr = attn.mla_decode_paged(p["attn"], h, cfg,
-                                               cache["ckv"], cache["krope"],
-                                               pt, pos)
+            fn = attn.mla_prefill_paged if chunk else attn.mla_decode_paged
+            a, ckv, kr = fn(p["attn"], h, cfg, cache["ckv"], cache["krope"],
+                            pt, pos)
             new_cache = {"ckv": ckv, "krope": kr}
         else:
-            a, ck, cv = attn.gqa_decode_paged(
+            fn = attn.gqa_prefill_paged if chunk else attn.gqa_decode_paged
+            a, ck, cv = fn(
                 p["attn"], h, cfg, cache["k"], cache["v"], pt, pos,
                 layer_kind=kind, use_flash=ctx.get("use_flash", False))
             new_cache = {"k": ck, "v": cv}
     else:
+        chunk = ctx.get("chunk", False)
         if cfg.attn_type == "mla":
-            a, ckv, kr = attn.mla_decode(p["attn"], h, cfg, cache["ckv"],
-                                         cache["krope"], pos)
+            fn = attn.mla_prefill_step if chunk else attn.mla_decode
+            a, ckv, kr = fn(p["attn"], h, cfg, cache["ckv"],
+                            cache["krope"], pos)
             new_cache = {"ckv": ckv, "krope": kr}
         else:
-            a, ck, cv = attn.gqa_decode(p["attn"], h, cfg, cache["k"],
-                                        cache["v"], pos, layer_kind=kind,
-                                        use_flash=ctx.get("use_flash", False))
+            fn = attn.gqa_prefill_step if chunk else attn.gqa_decode
+            a, ck, cv = fn(p["attn"], h, cfg, cache["k"],
+                           cache["v"], pos, layer_kind=kind,
+                           use_flash=ctx.get("use_flash", False))
             new_cache = {"k": ck, "v": cv}
     x = x + _maybe_post(a, p, "ln1_post", cfg)
     h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
@@ -555,6 +562,48 @@ def decode_step(params, cfg: ModelConfig, token, cache, pos, ctx_extra=None,
         ctx["x0"] = x
     x, _, new_cache = _apply_stack(params, cfg, x, ctx, cache=cache, pos=pos)
     return _logits(params, cfg, x), new_cache
+
+
+def chunkable(cfg: ModelConfig) -> bool:
+    """Cached-context chunked prefill (:func:`prefill_step`) is supported
+    for pure-attention decoders — the same family as :func:`pageable`
+    (SSM state and encoder/vision models would need their recurrent state
+    stepped token-by-token, so they keep the scan-of-decode-steps
+    :func:`prefill`)."""
+    return pageable(cfg)
+
+
+def prefill_step(params, cfg: ModelConfig, tokens, cache, pos,
+                 ctx_extra=None, use_flash: bool = False):
+    """One cached-context prefill chunk: ``tokens`` [B,Sq] prompt chunks
+    whose rows start at per-row cache position ``pos`` [B]. Each query at
+    pos+i attends to the pos+i cached KV (earlier chunks, or a prefix-cache
+    hit's shared pages) plus the chunk itself, and the chunk's KV lands in
+    the cache — so a prompt prefills across several calls while the cache
+    stays decode-compatible, and a cached prefix is never recomputed. Rows
+    at an out-of-window sentinel position write nothing (the serving
+    engine's masked-row convention for partial batches).
+
+    ``ctx_extra={"page_table": [B,P]}`` switches to the paged pools;
+    ``use_flash`` routes eligible layers through the chunked-prefill Pallas
+    kernel. Returns (last-position logits [B,1,V], cache) — only the final
+    chunk's logits (query at L-1) are meaningful, and the scheduler always
+    issues that position as its own one-token chunk, which is
+    shape-identical to a decode step: generated tokens are bit-equal across
+    chunkings and to the scan-of-decode-steps :func:`prefill` by
+    construction."""
+    assert chunkable(cfg), (cfg.name, cfg.layer_pattern)
+    B, Sq = tokens.shape
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    positions = pos[:, None] + jnp.arange(Sq)[None, :]
+    x = _embed_tokens(params, cfg, tokens, positions=positions)
+    ctx = {"positions": positions, "chunk": True}
+    if use_flash:
+        ctx["use_flash"] = True
+    if ctx_extra:
+        ctx.update(ctx_extra)
+    x, _, new_cache = _apply_stack(params, cfg, x, ctx, cache=cache, pos=pos)
+    return _logits(params, cfg, x[:, -1:]), new_cache
 
 
 def prefill(params, cfg: ModelConfig, batch, max_seq: int):

@@ -1,4 +1,6 @@
 from .engine import Request, ServingEngine
 from .kv_cache import PagedKVCache, kv_bytes_per_token
 from .prefix_cache import AdmissionPlan, PrefixCache, RadixNode
+from .scheduler import (Phase, PrefillChunk, QuantumReport,
+                        TokenBudgetScheduler)
 from .swap import model_bytes, pipelined_serve_time, swap_requests

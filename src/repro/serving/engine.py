@@ -3,12 +3,19 @@ for SGDRC serving, with two interchangeable backends behind one API.
 
 **JAX backend** (``backend="jax"``): executes real model forwards on the local
 device with slot-based continuous batching. Each tenant owns a fixed pool of
-decode slots; requests are admitted into free slots and evicted at *step
-boundaries* (one engine quantum = one bounded batched prefill or decode call —
-the TPU analogue of the paper's tile-quantum preemption point). Prompt
-processing is one batched ``prefill_fn`` call per admission group (a jitted
-scan over the prompt), and decode runs batched across all slots of a tenant
-with per-slot sequence positions.
+decode slots; requests carry an explicit phase state machine (``WAITING ->
+PREFILLING(pos) -> DECODING -> FINISHED``) and every quantum is composed by
+the :class:`~repro.serving.scheduler.TokenBudgetScheduler`: decode tokens
+first (one batched decode across the tenant's DECODING slots), then
+admission, then cached-context prefill *chunks* of at most ``chunk_size``
+tokens per request, all bounded by the class's per-quantum token budget — a
+long prompt prefills across several quanta while decode keeps ticking (the
+TBT guarantee a monolithic prefill quantum used to break), with the quantum
+boundary the TPU analogue of the paper's tile-quantum preemption point.
+Chunks run through one batched ``tf.prefill_step`` call per length group
+(Sq-token query chunks attending to their ``pos + Sq`` cached KV); the final
+prompt position is always its own one-token chunk, so generated tokens are
+bit-equal across chunk sizes and to the seed's scan-of-decode-steps prefill.
 
 With ``paged=True`` the KV cache is a :class:`~repro.serving.kv_cache.
 PagedKVCache`: slots share a page pool carved from the ColoredArena (LS/BE
@@ -25,12 +32,16 @@ keeps a :class:`~repro.serving.prefix_cache.PrefixCache`: a radix tree over
 prompt token ids whose nodes own ref-counted KV pages in the colored arena.
 Admission matches the prompt against the tree, maps the cached prefix pages
 copy-on-write into the slot's page table, and prefills only the uncached
-suffix — strictly fewer free pages and strictly fewer prefill FLOPs/bytes
-per hit, which is extra admission capacity and extra lendable bandwidth at
-equal arena bytes. Committed prompt (and, at eviction, generated) pages are
-donated back to the tree; zero-ref leaves are LRU-evicted under pool
-pressure; shared pages referenced by any live page table are pinned out of
-tidal ``resplit`` migrations until their references drop.
+suffix — batched through the same cached-context chunk path as everything
+else (no per-token replay loop, so ``prefix_min_hit`` defaults to 0) —
+strictly fewer free pages and strictly fewer prefill FLOPs/bytes per hit,
+which is extra admission capacity and extra lendable bandwidth at equal
+arena bytes. The scheduler's hit-aware admission orders the waiting queue by
+predicted hit size, so under pool pressure the cheap admissions land first
+and the batch runs wider. Committed prompt (and, at eviction, generated)
+pages are donated back to the tree; zero-ref leaves are LRU-evicted under
+pool pressure; shared pages referenced by any live page table are pinned out
+of tidal ``resplit`` migrations until their references drop.
 
 **Sim backend** (``backend="sim"``): drives the discrete-event
 ``core.simulator.GPUSimulator`` with the same request stream, so the paper's
@@ -42,9 +53,12 @@ threaded end-to-end: ``plan.sm_be`` becomes the BE *quantum share* — the
 fraction of engine quanta granted to BE tenants while LS work is pending
 (elastic multiplexing: BE gets everything when LS idles, and with no plan BE
 is strictly preempted, the conservative default) — ``plan.ch_be`` sets the
-ColoredArena channel split (and the simulator's hard bandwidth split), and
-``metrics()`` reports per-class SLO attainment / throughput so the plan's
-effect is observable.
+ColoredArena channel split (and the simulator's hard bandwidth split),
+``plan.prefill_budget`` caps BE prefill tokens per quantum (the scheduler's
+throttle, so tidal re-planning can slow BE prompt processing without
+touching BE's SM share), and ``metrics()`` reports per-class SLO attainment
+/ throughput plus p50/p99 TTFT and TBT so the plan's effect on both latency
+phases is observable.
 
 **Online control plane**: pass ``controller=`` (an
 :class:`~repro.core.controller.OnlineController` over a plan frontier, or a
@@ -89,6 +103,7 @@ from ..core.tenancy import TenantSpec
 from ..models import transformer as tf
 from .kv_cache import PagedKVCache, kv_bytes_per_token
 from .prefix_cache import PrefixCache
+from .scheduler import Phase, QuantumReport, TokenBudgetScheduler
 
 
 @dataclass
@@ -100,11 +115,17 @@ class Request:
     t_submit: float
     t_admit: Optional[float] = None   # entered a decode slot
     t_first: Optional[float] = None   # first output token (TTFT)
+    t_last: Optional[float] = None    # latest output token (TBT tracking)
     t_done: Optional[float] = None
     output: Optional[list] = None
     slot: Optional[int] = None
     failed: bool = False           # rejected (e.g. can never fit KV pages)
     hit_tokens: int = 0            # prefix-cache hit length at admission
+    # phase state machine (serving.scheduler): WAITING -> PREFILLING(pos)
+    # -> DECODING -> FINISHED; ``prefill_pos`` is the next prompt position
+    # to compute (a prefix-cache hit starts at its uncached suffix)
+    phase: Phase = Phase.WAITING
+    prefill_pos: int = 0
 
     @property
     def latency(self):
@@ -133,10 +154,11 @@ class _TenantRT:
     alloc_name: Optional[str] = None
     kv: Optional[PagedKVCache] = None       # page-table state (paged mode)
     prefix: Optional[PrefixCache] = None    # radix-tree page sharing
-    replay: Dict[int, int] = field(default_factory=dict)  # slot -> replay pos
+    chunk_fn: object = None                 # jitted cached-context prefill
     peak_active: int = 0                    # max concurrent decode slots seen
     prefill_tokens: int = 0                 # prompt tokens admitted
     prefill_computed: int = 0               # prompt tokens actually prefilled
+    tbt_gaps: List[float] = field(default_factory=list)  # inter-token gaps
     # sim-backend knobs / results
     closed_loop: bool = False
     sim_seq: Optional[int] = None
@@ -145,6 +167,14 @@ class _TenantRT:
 
     def has_work(self) -> bool:
         return bool(self.queue) or any(r is not None for r in self.active)
+
+
+def _earliest_outstanding(rt: "_TenantRT") -> float:
+    """Hoisted tenant-priority key for ``ServingEngine._pick``: earliest
+    submit time among this tenant's queued + active requests."""
+    ts = [r.t_submit for r in rt.queue]
+    ts += [r.t_submit for r in rt.active if r is not None]
+    return min(ts) if ts else float("inf")
 
 
 def _scatter_rows(dst_cache, src_cache, slots):
@@ -185,7 +215,22 @@ class _JaxBackend:
                                   ctx_extra={"page_table": pt},
                                   use_flash=eng.use_flash)
 
+        def _chunk(p, toks, cache, pos):
+            return tf.prefill_step(p, cfg, toks, cache, pos,
+                                   use_flash=eng.use_flash)
+
+        def _chunk_paged(p, toks, cache, pos, pt):
+            return tf.prefill_step(p, cfg, toks, cache, pos,
+                                   ctx_extra={"page_table": pt},
+                                   use_flash=eng.use_flash)
+
+        # monolithic prompt processing survives only as the fallback for
+        # models the cached-context chunk path can't serve (SSM state,
+        # encoders, vision cross-attn: tf.chunkable is False)
         rt.prefill_fn = jax.jit(_prefill, static_argnums=2)
+        if tf.chunkable(cfg):
+            rt.chunk_fn = jax.jit(_chunk_paged if eng.paged else _chunk,
+                                  donate_argnums=(2,))
         # the previous cache is dead after each decode step — donate it so
         # the one-token append is in-place instead of a full pool copy
         if eng.paged:
@@ -217,6 +262,7 @@ class _JaxBackend:
     def _finish(self, rt: _TenantRT, slot: int):
         req = rt.active[slot]
         req.t_done = self.engine.clock()
+        req.phase = Phase.FINISHED
         rt.done.append(req)
         rt.active[slot] = None
         pos = int(rt.pos[slot])
@@ -234,77 +280,28 @@ class _JaxBackend:
         elif rt.kv is not None:
             rt.kv.free_slot(slot)
 
-    def _take(self, rt: _TenantRT) -> List[Request]:
-        """Pop admissible requests off the queue. Whole-row mode: one per
-        free slot. Paged mode: additionally page-gated — a request needs
-        pages for its full extent (FIFO, no head-of-line bypass). With a
-        prefix cache, a radix-tree hit maps cached pages into the slot and
-        the request needs strictly fewer *fresh* pages (suffix + predicted
-        copy-on-write forks); under pool pressure cold cached pages are
-        LRU-evicted before admission stalls."""
-        eng = self.engine
-        free = [s for s, r in enumerate(rt.active) if r is None]
-        if rt.kv is None:
-            take = rt.queue[: len(free)]
-            del rt.queue[: len(take)]
-            for r in take:
-                r.slot = free.pop(0)
-            return take
-        take = []
-        while rt.queue and free:
-            req = rt.queue[0]
-            need = min(len(req.tokens) + req.max_new, eng.max_seq)
-            if rt.kv.pages_for(need) > rt.kv.n_pages:
-                # can never fit, even with an empty pool: fail it rather
-                # than deadlock the queue head forever
-                req.t_done = eng.clock()
-                req.output = []
-                req.failed = True
-                rt.done.append(rt.queue.pop(0))
-                continue
-            plan, admitted = None, False
-            while True:
-                plan = (rt.prefix.plan(req.tokens, need)
-                        if rt.prefix is not None else None)
-                if plan is not None and plan.match_len < \
-                        eng.prefix_min_hit * len(req.tokens):
-                    plan = None          # hit too small to beat a prefill
-                need_free = (plan.need_free if plan is not None
-                             else rt.kv.pages_for(need))
-                if rt.kv.can_admit_pages(need_free):
-                    admitted = True
-                    break
-                # pool pressure: evict LRU zero-ref tree leaves, then
-                # re-plan and re-check (the eviction may have dropped a
-                # matched node, growing need_free). Terminates: each pass
-                # either admits, fails to evict, or shrinks the tree.
-                if rt.prefix is None or not rt.prefix.evict_until(need_free):
-                    break
-            if not admitted:
-                break
-            req.slot = free.pop(0)
-            if plan is not None:
-                rt.prefix.acquire(plan, req.slot)
-                req.hit_tokens = plan.match_len
-                rt.replay[req.slot] = plan.replay_from
-            else:
-                if rt.prefix is not None:
-                    rt.prefix.note_miss(len(req.tokens))
-                rt.kv.alloc_slot(req.slot, need)
-            take.append(rt.queue.pop(0))
-        return take
+    def _write_sentinel(self, rt: _TenantRT) -> int:
+        """A cache position no batched call may write: dense caches drop any
+        position >= max_seq; paged lookups drop any logical page >= the
+        table width. Used to mask rows out of a batched decode/chunk call
+        (their compute runs, their writes drop, their outputs are
+        ignored)."""
+        if rt.kv is not None:
+            return rt.kv.pages_per_slot * rt.kv.page_size
+        return self.engine.max_seq
 
-    def _post_admit(self, rt: _TenantRT, req: Request, first_tok: int):
-        """Shared admission epilogue: seed the slot's decode state with the
-        first output token, donate the freshly committed full prompt pages
-        to the prefix tree, and finish degenerate (max_new<=1) requests."""
+    def _seed_first_token(self, rt: _TenantRT, req: Request, first_tok: int):
+        """Prefill-completion epilogue: the request enters DECODING seeded
+        with its first output token; the committed full prompt pages are
+        donated to the prefix tree; degenerate (max_new<=1) requests finish
+        immediately."""
         eng = self.engine
         s = req.slot
         L = len(req.tokens)
         now = eng.clock()
-        req.t_admit, req.t_first = now, now
+        req.t_first = req.t_last = now
+        req.phase = Phase.DECODING
         req.output = [int(first_tok)]
-        rt.active[s] = req
         rt.pos[s] = L
         rt.last_tok[s] = req.output[0]
         if rt.prefix is not None:
@@ -312,132 +309,151 @@ class _JaxBackend:
         if len(req.output) >= max(req.max_new, 1) or rt.pos[s] >= eng.max_seq:
             self._finish(rt, s)
 
-    def _admit(self, rt: _TenantRT) -> bool:
-        """Fill free slots from the queue: one batched prefill call per
-        prompt-length group (each admitted request gets its first token).
-        Paged mode prefills only to the page-aligned prompt length;
-        prefix-cache hits skip the batched prefill entirely and replay only
-        their uncached suffix (:meth:`_replay_admit`)."""
+    def _prefill_monolithic(self, rt: _TenantRT, reqs: List[Request]) -> int:
+        """Fallback prompt processing for non-chunkable models (SSM state,
+        encoders): one batched ``tf.prefill`` call per prompt-length group,
+        rows scattered into the slot cache. Whole prompts, one quantum."""
         eng = self.engine
-        take = self._take(rt)
-        if not take:
-            return False
-        hits = [r for r in take if r.slot in rt.replay]
         by_len: Dict[int, List[Request]] = {}
-        for r in take:
-            if r.slot not in rt.replay:
-                by_len.setdefault(len(r.tokens), []).append(r)
-        for L, reqs in by_len.items():
-            toks = jnp.asarray(np.stack([r.tokens for r in reqs]))
-            slots = [r.slot for r in reqs]
-            if rt.kv is not None:
-                cap = rt.kv.pages_for(L) * rt.kv.page_size
-                last_logits, pcache = rt.prefill_fn(rt.params, toks, cap)
-                rt.cache = rt.kv.write_prefill(rt.cache, pcache, slots, L)
-            else:
-                last_logits, pcache = rt.prefill_fn(rt.params, toks,
-                                                    eng.max_seq)
-                rt.cache = _scatter_rows(rt.cache, pcache,
-                                         jnp.asarray(slots, jnp.int32))
-            first = np.asarray(jnp.argmax(last_logits[:, 0], axis=-1))
-            rt.prefill_tokens += L * len(reqs)
-            rt.prefill_computed += L * len(reqs)
-            for j, req in enumerate(reqs):
-                self._post_admit(rt, req, int(first[j]))
-        if hits:
-            self._replay_admit(rt, hits)
-        rt.peak_active = max(rt.peak_active,
-                             sum(r is not None for r in rt.active))
-        return True
-
-    def _replay_admit(self, rt: _TenantRT, reqs: List[Request]):
-        """Prefix-hit admission: the matched pages are already mapped into
-        the slot's page table, so only the uncached suffix is computed —
-        single-token decode steps at the suffix positions, batched across
-        the hit slots, with every other row masked by an all-unmapped page
-        table (writes drop, logits ignored). A write landing in a shared
-        page forks it copy-on-write first. Token equivalence with the
-        batched prefill is by construction: ``tf.prefill`` *is* a scan of
-        this same decode step."""
-        kv = rt.kv
-        cur = {r.slot: rt.replay.pop(r.slot) for r in reqs}
-        ends = {r.slot: len(r.tokens) for r in reqs}
-        prompt = {r.slot: np.asarray(r.tokens, np.int32) for r in reqs}
-        first = {}
-        n, P = kv.n_slots, kv.pages_per_slot
-        while cur:
-            rows = list(cur.items())
-            toks = np.zeros((n, 1), np.int32)
-            pos = np.zeros(n, np.int32)
-            for s, p in rows:
-                if kv.needs_fork(s, p):
-                    rt.cache = kv.fork_cow(rt.cache, s, p // kv.page_size)
-                toks[s, 0] = prompt[s][p]
-                pos[s] = p
-            tbl = np.full((n, P), kv.n_pages, np.int32)
-            for s, _ in rows:
-                tbl[s] = kv.page_table[s]
-            logits, rt.cache = rt.decode_fn(rt.params, jnp.asarray(toks),
-                                            rt.cache, jnp.asarray(pos),
-                                            jnp.asarray(tbl))
-            done_rows = [s for s, p in rows if p + 1 >= ends[s]]
-            if done_rows:
-                arg = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
-                for s in done_rows:
-                    first[s] = int(arg[s])
-                    del cur[s]
-            for s in cur:
-                cur[s] += 1
-            rt.prefill_computed += len(rows)
         for r in reqs:
-            rt.prefill_tokens += len(r.tokens)
-            self._post_admit(rt, r, first[r.slot])
+            by_len.setdefault(len(r.tokens), []).append(r)
+        tokens = 0
+        for L, group in by_len.items():
+            toks = jnp.asarray(np.stack([r.tokens for r in group]))
+            slots = [r.slot for r in group]
+            last_logits, pcache = rt.prefill_fn(rt.params, toks, eng.max_seq)
+            rt.cache = _scatter_rows(rt.cache, pcache,
+                                     jnp.asarray(slots, jnp.int32))
+            first = np.asarray(jnp.argmax(last_logits[:, 0], axis=-1))
+            rt.prefill_computed += L * len(group)
+            tokens += L * len(group)
+            for j, req in enumerate(group):
+                req.prefill_pos = L
+                self._seed_first_token(rt, req, int(first[j]))
+        return tokens
 
-    def _decode(self, rt: _TenantRT):
-        """One batched decode across every active slot of this tenant."""
+    def _run_chunks(self, rt: _TenantRT, chunks) -> int:
+        """Execute this quantum's prefill chunks: waves preserve per-slot
+        chunk order, each wave batches equal-length chunks into one
+        cached-context ``prefill_step`` call across the slot pool (rows not
+        in the group sit at the write sentinel — writes drop, logits
+        ignored). A chunk write landing in a shared page forks it
+        copy-on-write first; a chunk that reaches the end of its prompt
+        seeds the request's first output token. Returns tokens computed."""
+        kv = rt.kv
+        by_slot: Dict[int, list] = {}
+        for c in chunks:
+            by_slot.setdefault(c.slot, []).append(c)
+        tokens = 0
+        sentinel = self._write_sentinel(rt)
+        while any(by_slot.values()):
+            wave = [lst.pop(0) for lst in by_slot.values() if lst]
+            by_len: Dict[int, list] = {}
+            for c in wave:
+                by_len.setdefault(c.length, []).append(c)
+            for Sq, group in by_len.items():
+                toks = np.zeros((rt.n_slots, Sq), np.int32)
+                pos = np.full(rt.n_slots, sentinel, np.int32)
+                for c in group:
+                    toks[c.slot] = c.req.tokens[c.start:c.start + Sq]
+                    pos[c.slot] = c.start
+                    if kv is not None:
+                        # fork every shared page this chunk will write into
+                        for pg in range(c.start // kv.page_size,
+                                        (c.start + Sq - 1) // kv.page_size
+                                        + 1):
+                            if kv.needs_fork(c.slot, pg * kv.page_size):
+                                rt.cache = kv.fork_cow(rt.cache, c.slot, pg)
+                if kv is not None:
+                    logits, rt.cache = rt.chunk_fn(
+                        rt.params, jnp.asarray(toks), rt.cache,
+                        jnp.asarray(pos), kv.device_page_table())
+                else:
+                    logits, rt.cache = rt.chunk_fn(
+                        rt.params, jnp.asarray(toks), rt.cache,
+                        jnp.asarray(pos))
+                rt.prefill_computed += Sq * len(group)
+                tokens += Sq * len(group)
+                done = [c for c in group
+                        if c.start + Sq >= len(c.req.tokens)]
+                if done:
+                    arg = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+                for c in group:
+                    c.req.prefill_pos = c.start + Sq
+                for c in done:
+                    self._seed_first_token(rt, c.req, int(arg[c.slot]))
+        return tokens
+
+    def _decode(self, rt: _TenantRT, slots: List[int]):
+        """One batched decode across the tenant's DECODING slots. Rows not
+        in ``slots`` (free, or mid-prefill) are masked to the write
+        sentinel: their cache writes drop and their outputs are ignored, so
+        a slot prefilling across quanta is never corrupted by the decode
+        batch it shares the pool with."""
         eng = self.engine
         rt.peak_active = max(rt.peak_active,
                              sum(r is not None for r in rt.active))
+        live = np.zeros(rt.n_slots, bool)
+        live[slots] = True
         if rt.prefix is not None:
             # safety net: a decode append must never mutate a shared page
-            # (the admission replay forks every page it will write, so this
-            # does not fire on the predicted paths)
-            for s, req in enumerate(rt.active):
-                if req is not None and rt.kv.needs_fork(s, int(rt.pos[s])):
+            # (admission reserves + chunk execution fork every predicted
+            # write, so this does not fire on the predicted paths)
+            for s in slots:
+                if rt.kv.needs_fork(s, int(rt.pos[s])):
                     rt.cache = rt.kv.fork_cow(
                         rt.cache, s, int(rt.pos[s]) // rt.kv.page_size)
+        dec_pos = np.where(live, rt.pos,
+                           self._write_sentinel(rt)).astype(np.int32)
         toks = jnp.asarray(rt.last_tok[:, None])
         if rt.kv is not None:
             logits, rt.cache = rt.decode_fn(rt.params, toks, rt.cache,
-                                            jnp.asarray(rt.pos),
+                                            jnp.asarray(dec_pos),
                                             rt.kv.device_page_table())
         else:
             logits, rt.cache = rt.decode_fn(rt.params, toks, rt.cache,
-                                            jnp.asarray(rt.pos))
+                                            jnp.asarray(dec_pos))
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
-        for s, req in enumerate(rt.active):
-            if req is None:
-                continue
+        now = eng.clock()
+        for s in slots:
+            req = rt.active[s]
             rt.pos[s] += 1
             tok = int(nxt[s])
             req.output.append(tok)
             rt.last_tok[s] = tok
+            if req.t_last is not None:
+                rt.tbt_gaps.append(now - req.t_last)
+            req.t_last = now
             if len(req.output) >= max(req.max_new, 1) \
                     or rt.pos[s] >= eng.max_seq:
                 self._finish(rt, s)
 
     def quantum(self, rt: _TenantRT) -> bool:
-        # decode precedes admission: a request that finishes at this step
-        # releases its KV pages *before* this window's admission pass, so
-        # pages freed mid-window admit a waiting request in the same window
-        # (previously a freed-but-unreleased slot bounced an admissible
-        # request to the next quantum)
-        progressed = False
-        if any(r is not None for r in rt.active):
-            self._decode(rt)
-            progressed = True
-        if self._admit(rt):
-            progressed = True
+        """One scheduler-composed quantum: decode first (every DECODING slot
+        emits a token — and a request finishing here releases its KV pages
+        *before* this quantum's admission pass, so pages freed mid-window
+        admit a waiting request in the same window), then admission (slots +
+        pages only), then prefill chunks under the class token budget. A
+        prompt therefore prefills across quanta while decode keeps
+        ticking."""
+        eng = self.engine
+        sched = eng.scheduler
+        report = QuantumReport(rt.spec.name, rt.spec.priority,
+                               budget=sched.budget_for(rt.spec.priority))
+        dec = sched.decode_slots(rt)
+        if dec:
+            self._decode(rt, dec)
+            report.decode_tokens = len(dec)
+        admitted = sched.admit(rt, eng)
+        if rt.chunk_fn is not None:
+            chunks = sched.prefill_chunks(rt, len(dec))
+            if chunks:
+                report.prefill_tokens = self._run_chunks(rt, chunks)
+        elif admitted:
+            report.prefill_tokens = self._prefill_monolithic(rt, admitted)
+        progressed = bool(dec or admitted or report.prefill_tokens)
+        if progressed:
+            eng.quantum_log.append(report)
         return progressed
 
     def run_until_idle(self, max_steps: int = 100_000, horizon=None) -> int:
@@ -502,8 +518,14 @@ class _SimBackend:
                                     max(len(r.tokens) - 1, 0)))
                     est.insert_tokens(r.tokens)
                 prefix_est = int(np.mean(seen)) if seen else 0
+            # chunked-prefill modeling: with a chunk_size the prefill phase
+            # becomes one kernel per chunk (the simulator's preemption
+            # boundary, like the engine's quanta) and the cost model
+            # charges the per-chunk KV re-read + weight re-read tax
             kern = request_kernels(rt.cfg, B, S, "prefill", self.dev,
-                                   rt.max_kernels, prefix=prefix_est)
+                                   rt.max_kernels, prefix=prefix_est,
+                                   chunk=eng.chunk_size)
+            n_prefill_k = len(kern)
             # decode phase carries the KV-cache *write* traffic of the
             # engine's actual decode path — paged appends are O(tokens);
             # whole-row mask-scatter rewrites the window. Kept at (chunked)
@@ -523,7 +545,8 @@ class _SimBackend:
                 kern = kern + [step_k] * n_chunks
             tn = Tenant(name, rt.spec.priority, kern,
                         arrivals=arrivals or None,
-                        closed_loop=rt.closed_loop)
+                        closed_loop=rt.closed_loop,
+                        prefill_kernels=n_prefill_k if steps > 0 else None)
             built.append((rt, pending, tn))
         if horizon is None:
             horizon = t_max * 1.05 + 1.0
@@ -572,6 +595,18 @@ class ServingEngine:
                    capacity equivalent, or the arena class capacity).
       use_flash    route decode attention through the ragged Pallas
                    flash-decode kernel (interpret mode off-TPU).
+      chunk_size   max prefill tokens a request advances per quantum
+                   (serving.scheduler): a long prompt prefills across
+                   several quanta while decode keeps ticking, bounding the
+                   TBT spike a monolithic co-located prefill inflicts.
+                   None = whole prompt per quantum (still through the
+                   cached-context chunk path for chunkable models).
+      token_budget per-class per-quantum token cap: decode tokens first,
+                   prefill chunks fill the remainder.
+      hit_aware    admission orders the waiting queue by predicted
+                   prefix-cache hit size (ties FIFO) — hits admit first
+                   under pool pressure.
+      seed         tie-break seed for deterministic tenant ordering.
       device       DeviceSpec or name for the sim backend.
       policy       ComputePolicy kind for the sim backend.
     """
@@ -582,27 +617,38 @@ class ServingEngine:
                  hash_model=None, now_fn=None, slots_ls: int = 4,
                  slots_be: int = 4, paged: bool = False, page_size: int = 8,
                  kv_pages: Optional[int] = None, use_flash: bool = False,
+                 chunk_size: Optional[int] = None,
+                 token_budget: Optional[int] = None, hit_aware: bool = True,
                  device="tpu-v5e", policy: str = "sgdrc",
                  controller=None, control_interval: int = 4,
                  control_dt: float = 0.02, prefix_cache: bool = False,
-                 prefix_min_hit: float = 0.125,
-                 migration_bytes: float = 0.0):
+                 prefix_min_hit: float = 0.0,
+                 migration_bytes: float = 0.0, seed: int = 0):
         self.max_seq = max_seq
         self.paged = paged
         self.page_size = page_size
         self.kv_pages = kv_pages
         self.use_flash = use_flash
+        self.chunk_size = chunk_size
         # radix-tree copy-on-write KV page sharing (serving.prefix_cache):
         # common prompt prefixes map cached pages into new slots' tables and
         # only the uncached suffix is prefilled
         if prefix_cache and backend == "jax" and not paged:
             raise ValueError("prefix_cache=True requires paged=True")
         self.prefix_cache = prefix_cache
-        # minimum hit fraction to use a match: the suffix is replayed one
-        # token per decode step, so a tiny hit on a long prompt would trade
-        # one batched prefill for a long sequential replay (a batched
-        # suffix-prefill model path would lift this — see ROADMAP)
+        # minimum hit fraction to use a match: 0 since the suffix replay is
+        # a batched cached-context prefill (any full-page hit pays off; the
+        # old one-token-per-step replay justified a 12.5% floor)
         self.prefix_min_hit = prefix_min_hit
+        # phase-aware chunked-prefill token-budget scheduler: owns
+        # admission order and per-quantum chunk composition
+        self.scheduler = TokenBudgetScheduler(
+            chunk_size=chunk_size, budget_ls=token_budget,
+            budget_be=token_budget,
+            prefill_budget_be=(plan.prefill_budget
+                               if plan is not None else None),
+            hit_aware=hit_aware, prefix_min_hit=prefix_min_hit)
+        self.quantum_log: List[QuantumReport] = []
         # resplit-aware migration costing: jax backend accumulates the
         # arena's actual moved-page bytes; the sim backend charges
         # migration_bytes * |Δch_be| of memory-system stall per transition
@@ -631,6 +677,11 @@ class ServingEngine:
         self._last_window = None
         self.slots_ls, self.slots_be = slots_ls, slots_be
         self.events: List[tuple] = []   # (quantum_idx, tenant, class)
+        # deterministic tenant tie-breaking: ranks drawn from a seeded rng
+        # at add_tenant, so equal-arrival picks are stable across runs
+        self._tie_rng = np.random.default_rng(seed)
+        self._tie_rank: Dict[str, float] = {}
+        self._ctl_tbt_idx: Dict[str, int] = {}
         self._step_idx = 0
         self.sim_result = None
         self._elapsed = None
@@ -680,6 +731,7 @@ class ServingEngine:
                        closed_loop=closed_loop, sim_seq=sim_seq,
                        max_kernels=max_kernels)
         self.backend.add_tenant(rt)
+        self._tie_rank[spec.name] = float(self._tie_rng.random())
         if self.arena is not None and not self.paged:
             # SSM-state tenants have no attention KV; keep a nonzero slice
             # so their placement is still tracked/colored
@@ -710,9 +762,13 @@ class ServingEngine:
 
     # -- online control plane ------------------------------------------
     def _load_signal(self):
-        """LoadSignal over the window since the last control tick."""
+        """LoadSignal over the window since the last control tick, with the
+        window's LS latency split into its phases: p99 TTFT (admission +
+        prefill) and p99 TBT (inter-token gaps) next to the end-to-end SLO
+        attainment."""
         from ..core.compute import LoadSignal
         q = a = slots = slo_ok = slo_n = 0
+        ttfts, gaps = [], []
         for name, rt in self.tenants.items():
             if not rt.spec.is_ls:
                 continue
@@ -721,15 +777,24 @@ class ServingEngine:
             slots += rt.n_slots
             i0 = self._ctl_done_idx.get(name, 0)
             self._ctl_done_idx[name] = len(rt.done)
-            if rt.spec.slo_ms is not None:
-                for r in rt.done[i0:]:
-                    if r.failed or r.latency is None:
-                        continue
+            g0 = self._ctl_tbt_idx.get(name, 0)
+            self._ctl_tbt_idx[name] = len(rt.tbt_gaps)
+            gaps += rt.tbt_gaps[g0:]
+            for r in rt.done[i0:]:
+                if r.failed or r.latency is None:
+                    continue
+                if r.ttft is not None:
+                    ttfts.append(r.ttft)
+                if rt.spec.slo_ms is not None:
                     slo_n += 1
                     slo_ok += r.latency * 1e3 <= rt.spec.slo_ms
         return LoadSignal(ls_queued=q, ls_active=a, ls_slots=max(slots, 1),
                           ls_slo_attainment=(slo_ok / slo_n) if slo_n
-                          else None)
+                          else None,
+                          ls_ttft_p99_ms=(float(np.percentile(ttfts, 99)
+                                                * 1e3) if ttfts else None),
+                          ls_tbt_p99_ms=(float(np.percentile(gaps, 99)
+                                               * 1e3) if gaps else None))
 
     def _maybe_control(self):
         """Consult the controller at the quantum boundary: every
@@ -793,6 +858,10 @@ class ServingEngine:
         free bookkeeping."""
         prev = self._applied_plan
         self.sm_be = plan.sm_be
+        # prefill-budget knob: tidal re-planning throttles BE prefill
+        # tokens per quantum, not only BE's SM share
+        self.scheduler.set_prefill_budget(
+            getattr(plan, "prefill_budget", None))
         moved = 0
         pinned = []
         if self.arena is not None and (prev is None
@@ -822,12 +891,12 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def _pick(self, rts: List[_TenantRT]) -> List[_TenantRT]:
-        """Earliest outstanding request first (FIFO across tenants)."""
-        def key(rt):
-            ts = [r.t_submit for r in rt.queue]
-            ts += [r.t_submit for r in rt.active if r is not None]
-            return min(ts) if ts else float("inf")
-        return sorted(rts, key=key)
+        """Earliest outstanding request first (FIFO across tenants), ties
+        broken by each tenant's seeded rank (deterministic across runs —
+        the old closure key left equal-arrival ordering to sort stability
+        over dict insertion order)."""
+        return sorted(rts, key=lambda rt: (_earliest_outstanding(rt),
+                                           self._tie_rank[rt.spec.name]))
 
     def step(self) -> bool:
         """One engine quantum (JAX backend): choose a tenant class via the
@@ -916,21 +985,34 @@ class ServingEngine:
         return n
 
     # ------------------------------------------------------------------
+    @staticmethod
+    def _pcts(vals, keys=("p50", "p99")):
+        """{p50_ms, p99_ms} (or TTFT/TBT-prefixed variants) for a latency
+        list in seconds; None entries when the list is empty."""
+        out = {}
+        for k in keys:
+            q = float(k[1:])
+            out[f"{k}_ms"] = (float(np.percentile(vals, q) * 1e3)
+                              if vals else None)
+        return out
+
     def metrics(self):
         out = {}
-        cls = {"LS": {"done": [], "tokens": 0, "slo_ok": 0, "slo_n": 0,
-                      "completed": 0},
-               "BE": {"done": [], "tokens": 0, "slo_ok": 0, "slo_n": 0,
-                      "completed": 0}}
+        cls = {"LS": {"done": [], "ttft": [], "tbt": [], "tokens": 0,
+                      "slo_ok": 0, "slo_n": 0, "completed": 0},
+               "BE": {"done": [], "ttft": [], "tbt": [], "tokens": 0,
+                      "slo_ok": 0, "slo_n": 0, "completed": 0}}
         for name, rt in self.tenants.items():
             served = [r for r in rt.done if not r.failed]
             n_failed = len(rt.done) - len(served)
             lats = [r.latency for r in served if r.latency is not None]
+            ttfts = [r.ttft for r in served if r.ttft is not None]
             out[name] = {
                 "completed": len(served) + rt.sim_completed,
                 "failed": n_failed,
-                "p50_ms": float(np.percentile(lats, 50) * 1e3) if lats else None,
-                "p99_ms": float(np.percentile(lats, 99) * 1e3) if lats else None,
+                **self._pcts(lats),
+                "ttft": self._pcts(ttfts),
+                "tbt": self._pcts(rt.tbt_gaps),
                 "peak_active": rt.peak_active,
             }
             if rt.kv is not None:
@@ -947,6 +1029,8 @@ class ServingEngine:
                 }
             c = cls[rt.spec.priority]
             c["done"] += lats
+            c["ttft"] += ttfts
+            c["tbt"] += rt.tbt_gaps
             c["completed"] += len(served) + rt.sim_completed
             c["tokens"] += sum(len(r.output or ()) for r in served)
             if rt.spec.slo_ms is not None:
@@ -958,8 +1042,9 @@ class ServingEngine:
             lats = c["done"]
             out["_class"][pri] = {
                 "completed": c["completed"],
-                "p50_ms": float(np.percentile(lats, 50) * 1e3) if lats else None,
-                "p99_ms": float(np.percentile(lats, 99) * 1e3) if lats else None,
+                **self._pcts(lats),
+                "ttft": self._pcts(c["ttft"]),
+                "tbt": self._pcts(c["tbt"]),
                 "throughput_rps": (c["completed"] / elapsed
                                    if elapsed else None),
                 "tokens_per_s": (c["tokens"] / elapsed if elapsed else None),

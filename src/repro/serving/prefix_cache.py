@@ -19,17 +19,23 @@ the uncached suffix:
     tenant class's :class:`~repro.core.coloring.allocator.ColoredArena`
     channel set, so shared pages stay inside the class's bandwidth
     partition; each node owns one arena group (``<tenant>:px<id>``).
-  * **copy-on-write**: positions above the matched prefix are replayed
-    (recomputed); a replay or decode write that would land in a shared page
-    forks it first (``fork_cow`` — device page copy + table remap), with
-    the fork destinations reserved at admission so a fork can never fail on
-    an emptied pool. Reads of a partially-valid shared page are safe: the
-    decode path masks positions above the row's ``pos``, and the replay
-    overwrites every position it will later read.
+  * **copy-on-write**: positions above the matched prefix are recomputed —
+    batched cached-context prefill chunks of the uncached suffix
+    (``tf.prefill_step`` via the engine's TokenBudgetScheduler; the old
+    one-token-per-step masked replay loop is retired). A chunk or decode
+    write that would land in a shared page forks it first (``fork_cow`` —
+    device page copy + table remap), with the fork destinations reserved at
+    admission so a fork can never fail on an emptied pool. Reads of a
+    partially-valid shared page are safe: the cached-context paths mask
+    positions above each query's own, and the suffix chunks overwrite every
+    position they will later read.
   * **admission**: a partial hit needs strictly fewer free pages
     (``suffix + predicted forks`` instead of the full extent) and strictly
     fewer prefill FLOPs/bytes (only the suffix is computed) — extra
-    admission capacity and lendable bandwidth at equal arena bytes.
+    admission capacity and lendable bandwidth at equal arena bytes. The
+    scheduler's hit-aware ordering admits big hits first under pool
+    pressure, and the batched suffix path makes any full-page hit worth
+    taking (``prefix_min_hit`` defaults to 0).
   * **donation**: at admission the request's freshly prefilled full prompt
     pages are inserted into the tree (concurrent same-prefix requests
     share immediately); at eviction the remaining full pages — prompt tail

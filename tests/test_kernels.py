@@ -265,3 +265,80 @@ def test_ssd_scan_property_decay_extremes(seed):
     want = ref.ref_ssd_scan(q, k, v, zero)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# chunked-prefill attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,Smax,Sq,H,Hkv,D", [
+    (2, 256, 8, 8, 2, 64), (1, 128, 16, 4, 4, 64), (2, 128, 1, 4, 2, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_prefill_attention_sweep(B, Smax, Sq, H, Hkv, D, dtype):
+    """Sq-token query chunks at per-row start positions attend to their
+    cached-context window (kernel vs jnp oracle); Sq == 1 covers the
+    scheduler's one-token seeding chunk."""
+    ks = jax.random.split(jax.random.key(11), 3)
+    q = _rand(ks[0], (B, Sq, H, D), dtype)
+    kc = _rand(ks[1], (B, Smax, Hkv, D), dtype)
+    vc = _rand(ks[2], (B, Smax, Hkv, D), dtype)
+    pos = jnp.asarray(list(range(0, B * 37, 37))[:B], jnp.int32)
+    out = ops.prefill_attention(q, kc.transpose(0, 2, 1, 3),
+                                vc.transpose(0, 2, 1, 3), pos, block_k=64)
+    want = ref.ref_prefill_attention(q, kc, vc, pos)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_prefill_attention_paged_matches_dense():
+    """Paged chunked-prefill through a shuffled page table equals the dense
+    chunk over the same logical KV, including partially-mapped rows."""
+    B, Smax, Sq, H, Hkv, D, ps = 3, 128, 8, 8, 2, 64, 16
+    P = Smax // ps
+    n_pages = 32
+    ks = jax.random.split(jax.random.key(12), 3)
+    q = _rand(ks[0], (B, Sq, H, D), jnp.float32)
+    kc = _rand(ks[1], (B, Smax, Hkv, D), jnp.float32)
+    vc = _rand(ks[2], (B, Smax, Hkv, D), jnp.float32)
+    pos = jnp.asarray([0, 40, 120], jnp.int32)     # chunk ends at pos+Sq-1
+    rng = np.random.default_rng(1)
+    pages = rng.permutation(n_pages)[:B * P].reshape(B, P)
+    kp = np.zeros((n_pages, Hkv, ps, D), np.float32)
+    vp = np.zeros((n_pages, Hkv, ps, D), np.float32)
+    for b in range(B):
+        for j in range(P):
+            kp[pages[b, j]] = np.asarray(kc)[b, j * ps:(j + 1) * ps] \
+                .transpose(1, 0, 2)
+            vp[pages[b, j]] = np.asarray(vc)[b, j * ps:(j + 1) * ps] \
+                .transpose(1, 0, 2)
+    pt = pages.astype(np.int32)
+    pt[0, 1:] = n_pages            # row 0 (chunk within page 0): unmapped
+    out = ops.prefill_attention_paged(jnp.asarray(q), jnp.asarray(kp),
+                                      jnp.asarray(vp), jnp.asarray(pt), pos)
+    want = ref.ref_prefill_attention(q, kc, vc, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    wantp = ref.ref_prefill_attention_paged(jnp.asarray(q), jnp.asarray(kp),
+                                            jnp.asarray(vp), jnp.asarray(pt),
+                                            pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(wantp),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_prefill_attention_reduces_to_decode():
+    """An Sq == 1 prefill chunk is exactly a decode step (the bit-stable
+    seeding-chunk contract)."""
+    B, Smax, H, Hkv, D = 2, 128, 4, 2, 64
+    ks = jax.random.split(jax.random.key(13), 3)
+    q = _rand(ks[0], (B, 1, H, D), jnp.float32)
+    kc = _rand(ks[1], (B, Hkv, Smax, D), jnp.float32)
+    vc = _rand(ks[2], (B, Hkv, Smax, D), jnp.float32)
+    pos = jnp.asarray([3, 90], jnp.int32)
+    a = ops.prefill_attention(q, kc, vc, pos, block_k=32)
+    b = ops.decode_attention(q[:, 0], kc, vc, pos, block_k=32,
+                             kv_layout="bhsd")
+    np.testing.assert_allclose(np.asarray(a[:, 0]), np.asarray(b),
+                               rtol=2e-6, atol=2e-6)

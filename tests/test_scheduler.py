@@ -1,0 +1,302 @@
+"""Chunked-prefill token-budget scheduler: bit-equality of generated tokens
+chunked-vs-monolithic (dense/paged, prefix cache on/off, flash), a hypothesis
+random-interleaving oracle over submit/chunk/decode orderings, the per-class
+token-budget invariant, hit-aware admission order, the plan's prefill-budget
+throttle, sim-side chunk phases, and the deterministic ``_pick`` tie-break."""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.controller import ResourcePlan
+from repro.core.tenancy import TenantSpec
+from repro.serving import Phase, ServingEngine
+
+MAX_SEQ = 24
+
+
+def _serve(cfg, params, prompts, max_new=5, **kw):
+    eng = ServingEngine(max_seq=MAX_SEQ, slots_ls=max(len(prompts), 2), **kw)
+    eng.add_tenant(TenantSpec("ls0", "LS"), cfg, params=params)
+    reqs = [eng.submit("ls0", p, max_new=max_new) for p in prompts]
+    eng.run_until_idle()
+    return eng, [r.output for r in reqs]
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    import jax
+    from repro.configs import smoke_config
+    from repro.models import transformer as tf
+    cfg = smoke_config("stablelm-1.6b").replace(num_layers=1,
+                                                activation_dtype="float32")
+    return cfg, tf.init_params(jax.random.key(7), cfg)
+
+
+# ---------------------------------------------------------------------------
+# bit-equality: chunked == monolithic, every backend variant
+# ---------------------------------------------------------------------------
+
+def test_chunked_matches_monolithic_all_variants(tiny):
+    """Generated tokens are bit-equal across chunk sizes (the final prompt
+    position always runs as its own one-token chunk, so the seeding logits
+    are chunking-invariant) — dense, paged, paged+flash, and paged+prefix
+    all agree with their monolithic runs."""
+    cfg, params = tiny
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, 100, L) for L in (4, 9, 6, 9)]
+    for kw in ({}, {"paged": True, "page_size": 4},
+               {"paged": True, "page_size": 4, "use_flash": True},
+               {"paged": True, "page_size": 4, "prefix_cache": True}):
+        _, ref = _serve(cfg, params, prompts, **kw)
+        for chunk in (2, 3, 8):
+            _, out = _serve(cfg, params, prompts, chunk_size=chunk, **kw)
+            assert out == ref, (kw, chunk)
+
+
+def test_chunked_prefill_spans_quanta(tiny):
+    """A prompt longer than chunk_size visibly PREFILLs across several
+    quanta (phase machine: WAITING -> PREFILLING advancing by <= chunk ->
+    DECODING -> FINISHED), while prefill tokens per quantum respect the
+    chunk bound."""
+    cfg, params = tiny
+    rng = np.random.default_rng(5)
+    eng = ServingEngine(max_seq=MAX_SEQ, slots_ls=2, chunk_size=3)
+    eng.add_tenant(TenantSpec("ls0", "LS"), cfg, params=params)
+    req = eng.submit("ls0", rng.integers(0, 100, 10), max_new=3)
+    assert req.phase is Phase.WAITING
+    seen = []
+    while eng.step():
+        seen.append((req.phase, req.prefill_pos))
+    assert req.phase is Phase.FINISHED and len(req.output) == 3
+    prefilling = [p for ph, p in seen if ph is Phase.PREFILLING]
+    assert len(prefilling) >= 3            # 10 tokens at <= 3/quantum
+    steps = np.diff([0] + prefilling)
+    assert (steps <= 3).all()
+    assert any(ph is Phase.DECODING for ph, _ in seen)
+
+
+def test_ttft_tbt_metrics(tiny):
+    """metrics() splits latency into per-class TTFT and TBT percentiles;
+    TTFT <= end-to-end latency and TBT gaps exist once decode spans
+    quanta."""
+    cfg, params = tiny
+    rng = np.random.default_rng(7)
+    eng, _ = _serve(cfg, params, [rng.integers(0, 100, 6)] * 2, max_new=4)
+    m = eng.metrics()
+    cls = m["_class"]["LS"]
+    assert cls["ttft"]["p99_ms"] is not None
+    assert cls["tbt"]["p99_ms"] is not None
+    assert cls["ttft"]["p99_ms"] <= cls["p99_ms"]
+    for r in eng.tenants["ls0"].done:
+        assert r.ttft is not None and r.ttft <= r.latency
+
+
+# ---------------------------------------------------------------------------
+# hypothesis oracle: random interleavings of submit / chunk / decode
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=3, deadline=None)
+def test_random_interleaving_oracle(seed):
+    """Random submit timing, random chunk size, random per-op step counts,
+    paged + prefix cache: outputs bit-equal to the monolithic no-prefix
+    run (the scheduler may reorder admissions and split prefills, but
+    greedy tokens depend only on each request's own prompt)."""
+    import jax
+    from repro.configs import smoke_config
+    cfg = smoke_config("stablelm-1.6b").replace(num_layers=1,
+                                                activation_dtype="float32")
+    rng = np.random.default_rng(seed)
+    base = rng.integers(0, 100, 9)
+    ops = []
+    for _ in range(8):
+        keep = int(rng.integers(1, 10))
+        tail = rng.integers(0, 100, int(rng.integers(0, 4)))
+        ops.append((np.concatenate([base[:keep], tail]).astype(np.int32),
+                    int(rng.integers(1, 6)), int(rng.integers(0, 4))))
+    chunk = int(rng.integers(2, 7))
+
+    def serve(chunk_size, prefix):
+        eng = ServingEngine(max_seq=16, slots_ls=3, paged=True, page_size=4,
+                            kv_pages=10, prefix_cache=prefix,
+                            chunk_size=chunk_size)
+        eng.add_tenant(TenantSpec("ls0", "LS"), cfg, key=jax.random.key(0))
+        reqs = []
+        for toks, max_new, steps in ops:
+            reqs.append(eng.submit("ls0", toks, max_new=max_new))
+            for _ in range(steps):
+                eng.step()
+        eng.run_until_idle()
+        return [r.output for r in reqs]
+
+    ref = serve(None, False)
+    assert serve(chunk, False) == ref
+    assert serve(chunk, True) == ref
+    assert serve(None, True) == ref
+
+
+# ---------------------------------------------------------------------------
+# token budget / prefill budget
+# ---------------------------------------------------------------------------
+
+def test_token_budget_invariant(tiny):
+    """No quantum ever exceeds its class token budget (budget >= slot
+    count, so decode is never clamped): decode tokens first, prefill chunks
+    fill the remainder."""
+    cfg, params = tiny
+    rng = np.random.default_rng(9)
+    budget = 6
+    eng = ServingEngine(max_seq=MAX_SEQ, slots_ls=4, chunk_size=4,
+                        token_budget=budget)
+    eng.add_tenant(TenantSpec("ls0", "LS"), cfg, params=params)
+    for L in (10, 7, 12, 5, 9):
+        eng.submit("ls0", rng.integers(0, 100, L), max_new=4)
+    eng.run_until_idle()
+    assert eng.quantum_log, "no quanta recorded"
+    for q in eng.quantum_log:
+        assert q.budget == budget
+        assert q.tokens <= budget, (q.decode_tokens, q.prefill_tokens)
+    assert all(len(r.output) == 4 for r in eng.tenants["ls0"].done)
+
+
+def test_plan_prefill_budget_throttles_be(tiny):
+    """A ResourcePlan's prefill_budget caps BE prefill tokens per quantum
+    (the tidal throttle next to sm_be), while LS prefill stays unbounded."""
+    cfg, params = tiny
+    n = 16
+    plan = ResourcePlan(sm_be=0.5, ch_be=1 / 3, thres_dram=0.4,
+                        ls_channels=tuple(range(n - 4)),
+                        be_channels=tuple(range(n - 4, n)),
+                        max_ls_inflation=1.2, prefill_budget=2)
+    rng = np.random.default_rng(11)
+    eng = ServingEngine(max_seq=MAX_SEQ, plan=plan)
+    eng.add_tenant(TenantSpec("ls0", "LS"), cfg, params=params)
+    eng.add_tenant(TenantSpec("be0", "BE"), cfg, params=params)
+    eng.submit("ls0", rng.integers(0, 100, 10), max_new=6)
+    eng.submit("be0", rng.integers(0, 100, 10), max_new=3)
+    eng.run_until_idle()
+    be_q = [q for q in eng.quantum_log if q.priority == "BE"]
+    ls_q = [q for q in eng.quantum_log if q.priority == "LS"]
+    assert max(q.prefill_tokens for q in be_q) <= 2
+    assert max(q.prefill_tokens for q in ls_q) == 10    # unthrottled
+    assert len(eng.tenants["be0"].done[0].output) == 3  # still completes
+
+
+# ---------------------------------------------------------------------------
+# hit-aware admission order
+# ---------------------------------------------------------------------------
+
+def _hit_trace(rng, base, n_hits, n_cold):
+    """Interleave cold prompts ahead of hit-heavy ones: FIFO admits the
+    page-hungry cold head first and stalls; hit-first admits the cheap
+    hits."""
+    reqs = []
+    for i in range(max(n_hits, n_cold)):
+        if i < n_cold:
+            reqs.append(rng.integers(0, 100, 8).astype(np.int32))
+        if i < n_hits:
+            reqs.append(np.concatenate(
+                [base, rng.integers(0, 100, 1)]).astype(np.int32))
+    return reqs
+
+
+def test_hit_aware_admission_widens_batch(tiny):
+    """On a hit-heavy trace under pool pressure, ordering the waiting queue
+    by predicted prefix-cache hit size admits strictly more concurrent
+    slots than FIFO (ROADMAP PR 4 follow-up)."""
+    cfg, params = tiny
+
+    def peak(hit_aware):
+        rng = np.random.default_rng(13)
+        base = rng.integers(0, 100, 8).astype(np.int32)
+        eng = ServingEngine(max_seq=16, slots_ls=6, paged=True, page_size=4,
+                            kv_pages=9, prefix_cache=True,
+                            hit_aware=hit_aware)
+        eng.add_tenant(TenantSpec("ls0", "LS"), cfg, params=params)
+        # wave 0 warms the tree with the shared base prompt
+        eng.submit("ls0", base, max_new=2)
+        eng.run_until_idle()
+        for p in _hit_trace(rng, base, n_hits=3, n_cold=2):
+            eng.submit("ls0", p, max_new=2)
+        eng.tenants["ls0"].peak_active = 0
+        eng.run_until_idle()
+        m = eng.metrics()["ls0"]
+        assert m["completed"] == 6
+        return m["peak_active"]
+
+    assert peak(True) > peak(False)
+
+
+# ---------------------------------------------------------------------------
+# deterministic _pick tie-break
+# ---------------------------------------------------------------------------
+
+def test_pick_deterministic_across_runs(tiny):
+    """Equal-arrival tenants are ordered by the engine's seeded tie-break:
+    identical seeds reproduce the exact event sequence across fresh
+    engines (regression: the old closure key left ties to dict order)."""
+    cfg, params = tiny
+
+    def events(seed):
+        eng = ServingEngine(max_seq=MAX_SEQ, seed=seed)
+        for name in ("ls_a", "ls_b", "ls_c"):
+            eng.add_tenant(TenantSpec(name, "LS"), cfg, params=params)
+        for name in ("ls_a", "ls_b", "ls_c"):
+            eng.submit(name, np.arange(4), max_new=3, at=1.0)  # equal arrival
+        eng.run_until_idle()
+        return [t for _, t, _ in eng.events]
+
+    assert events(0) == events(0)
+    runs = {tuple(events(s)) for s in range(6)}
+    assert len(runs) > 1           # the seed actually drives the order
+
+
+# ---------------------------------------------------------------------------
+# sim backend: chunked prefill phases + costmodel tax
+# ---------------------------------------------------------------------------
+
+def test_sim_models_chunked_prefill_phases(tiny):
+    """With a chunk_size the sim backend emits one prefill kernel per chunk
+    (preemption at chunk boundaries) and records TTFT/TBT phase marks."""
+    cfg, _ = tiny
+
+    def run(chunk):
+        eng = ServingEngine(max_seq=MAX_SEQ, backend="sim",
+                            device="rtx-a5500", chunk_size=chunk)
+        eng.add_tenant(TenantSpec("ls0", "LS", batch_size=1), cfg)
+        for t in np.linspace(0.0, 0.2, 4):
+            eng.submit("ls0", np.zeros(32, np.int32), max_new=8, at=float(t))
+        eng.run_until_idle(horizon=3.0)
+        return eng.sim_result
+
+    mono, chunked = run(None), run(8)
+    tn_c = chunked.tenants[0]
+    assert tn_c.prefill_kernels == 4       # 32-token prompt / 8-token chunks
+    assert tn_c.ttfts and tn_c.tbt_gaps
+    assert np.isfinite(chunked.ls_ttft_p99())
+    assert np.isfinite(chunked.ls_tbt_p99())
+    # the chunking tax reaches the modeled prefill phase: chunked prefill
+    # kernels carry strictly more total bytes than the monolithic phase
+    mono_pre = sum(k.bytes
+                   for k in mono.tenants[0].kernels
+                   [:mono.tenants[0].prefill_kernels])
+    chunk_pre = sum(k.bytes for k in tn_c.kernels[:tn_c.prefill_kernels])
+    assert chunk_pre > mono_pre
+
+
+def test_costmodel_chunk_reread_tax():
+    """Chunked prefill strictly increases modeled HBM bytes (per-chunk KV
+    prefix re-reads + weight re-reads), monotonically as chunks shrink."""
+    from repro.configs import get_config
+    from repro.core.costmodel import model_costs
+    cfg = get_config("gemma2-9b")
+    S = 512
+
+    def total_bytes(chunk):
+        return sum(o.bytes for o in model_costs(cfg, 1, S, "prefill",
+                                                chunk=chunk))
+
+    mono = total_bytes(None)
+    assert total_bytes(128) > mono
+    assert total_bytes(64) > total_bytes(128)
+    assert total_bytes(None) == total_bytes(S)   # chunk >= S is monolithic
