@@ -89,3 +89,25 @@ print(json.dumps(eng.metrics(), indent=1))
 print(f"online transitions: {len(eng.transitions)} "
       f"(pages moved: {sum(t['pages_moved'] for t in eng.transitions)}, "
       f"migrated bytes: {eng.migrated_bytes})")
+
+# -- KV memory hierarchy: growth + host-tier page swap -----------------------
+# a deliberately tiny page pool oversubscribes the arena: requests admit on
+# prompt-extent pages only, grow page-by-page while decoding, and on
+# exhaustion cold decode page groups swap to a quantized (int8) host tier
+# over the PCIe CFS instead of being recomputed from scratch
+print("\nKV hierarchy under an oversubscribed pool "
+      "(--grow-pages --swap --cold-dtype int8 in the launcher):")
+eng = ServingEngine(max_seq=20, paged=True, page_size=4, kv_pages=10,
+                    grow_pages=True, swap=True, cold_dtype="int8",
+                    slots_ls=8, slots_be=8)
+eng.add_tenant(TenantSpec("be:gemma2", "BE"),
+               smoke_config("gemma2-9b").replace(
+                   num_layers=2, activation_dtype="float32"))
+rng = np.random.default_rng(1)
+reqs = [eng.submit("be:gemma2", rng.integers(0, 200, 8), max_new=10)
+        for _ in range(6)]
+eng.run_until_idle()
+m = eng.metrics()["be:gemma2"]
+print(f"peak concurrent slots: {m['peak_active']} "
+      f"(vs {10 * 4 // 20} with full-extent reservation on the same pool)")
+print("swap:", json.dumps(m["swap"], indent=1))

@@ -177,7 +177,7 @@ def layer_costs(cfg: ModelConfig, B, Sq, Skv, kind, moe_layer: bool,
 
 def model_costs(cfg: ModelConfig, B: int, S: int, mode: str,
                 kv_write=None, prefix: int = 0,
-                chunk=None) -> List[OpCost]:
+                chunk=None, swap_bytes: int = 0) -> List[OpCost]:
     """mode: train | prefill | decode. decode: Sq=1, Skv=S. train adds
     backward (2x fwd flops for grads) via the TRAIN_MULT on the caller side —
     here we return FORWARD costs; see step_costs(). ``kv_write`` (decode
@@ -192,7 +192,10 @@ def model_costs(cfg: ModelConfig, B: int, S: int, mode: str,
     each chunk re-reading its prefix KV and the layer weights — the
     chunking bandwidth tax the serving scheduler pays for bounded TBT. The
     op list concatenates the per-chunk costs, so the planner sees both the
-    tax and the per-chunk preemption granularity."""
+    tax and the per-chunk preemption granularity. ``swap_bytes`` appends a
+    zero-FLOP ``swap_pcie`` op carrying the request's KV swap traffic (host
+    tier page faults), so swap cost flows through the same per-class
+    bandwidth accounting as every other byte."""
     if mode == "prefill" and prefix:
         prefix = min(int(prefix), max(S - 1, 0))
     else:
@@ -207,6 +210,8 @@ def model_costs(cfg: ModelConfig, B: int, S: int, mode: str,
             ops += model_costs(cfg, B, end, "prefill",
                                prefix=start if start else 0)
             start = end
+        if swap_bytes > 0:
+            ops.append(OpCost("swap_pcie", 0.0, float(swap_bytes)))
         return ops
     if mode == "prefill" and prefix:
         Sq, Skv = S - prefix, S
@@ -233,6 +238,8 @@ def model_costs(cfg: ModelConfig, B: int, S: int, mode: str,
     ops.append(OpCost("embed", 0.0, T * cfg.d_model * bp))
     ops.append(OpCost("unembed", 2 * T * cfg.d_model * cfg.vocab_size,
                       (cfg.d_model * cfg.vocab_size + T * cfg.vocab_size) * bp))
+    if swap_bytes > 0:
+        ops.append(OpCost("swap_pcie", 0.0, float(swap_bytes)))
     return ops
 
 

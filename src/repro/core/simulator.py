@@ -51,14 +51,17 @@ class Kernel:
 def request_kernels(cfg: ModelConfig, B: int, S: int, mode: str,
                     dev: DeviceSpec, max_kernels: int = 24,
                     kv_write=None, prefix: int = 0,
-                    chunk=None) -> List[Kernel]:
+                    chunk=None, swap_bytes: int = 0) -> List[Kernel]:
     """``chunk`` (prefill only) models chunked prefill: the op stream is
     coalesced into one kernel per prompt chunk — each kernel carries the
     chunk's re-read tax from the cost model, and the kernel boundary is the
     simulator's preemption point (the engine-quantum analogue), which is
-    what lets a co-scheduled LS tenant interleave mid-prompt."""
+    what lets a co-scheduled LS tenant interleave mid-prompt. ``swap_bytes``
+    adds the request's KV host-tier fault traffic as a zero-FLOP
+    memory-bound op, charged at the owning class's bandwidth split like any
+    other byte."""
     ops = model_costs(cfg, B, S, mode, kv_write=kv_write, prefix=prefix,
-                      chunk=chunk)
+                      chunk=chunk, swap_bytes=swap_bytes)
     span = max(S - min(int(prefix), max(S - 1, 0)), 1)
     if chunk and mode == "prefill" and chunk < span:
         n_chunks = -(-span // int(chunk))

@@ -8,7 +8,8 @@ ServingEngine (slot-pool batched prefill/decode; LS preempts BE at step
 boundaries, or lends BE the plan's sm_be quantum share when --grid-search
 derives a ResourcePlan; colored KV arenas when --coloring; page-table KV
 admission with --paged, optionally through the ragged Pallas flash-decode
-kernel with --use-flash). With --backend sim the same request stream drives
+kernel with --use-flash; the full KV memory hierarchy with --grow-pages /
+--swap / --cold-dtype). With --backend sim the same request stream drives
 the contention simulator instead (pod-scale what-if on the full configs;
 see also benchmarks/fig12_invram.py).
 """
@@ -37,6 +38,25 @@ def main():
                          "prompt prefixes map into new slots' page tables "
                          "and only the uncached suffix is prefilled "
                          "(implies --paged)")
+    ap.add_argument("--grow-pages", action="store_true",
+                    help="dynamic page growth: admit on prompt-extent pages "
+                         "only and allocate decode pages lazily at page-"
+                         "boundary crossings; on pool exhaustion the "
+                         "youngest active request is preempted back to the "
+                         "queue (or swapped out with --swap). Implies "
+                         "--paged")
+    ap.add_argument("--swap", action="store_true",
+                    help="KV page-group swap to a host-memory tier over the "
+                         "PCIe CFS: growth victims and zero-ref prefix "
+                         "leaves move to host instead of being recomputed, "
+                         "and fault back in when re-admitted (implies "
+                         "--grow-pages)")
+    ap.add_argument("--cold-dtype", default="int8",
+                    choices=["int8", "fp16"],
+                    help="host cold-tier encoding for --swap: int8 = per-"
+                         "page abs-max quantization (4x less host memory, "
+                         "bounded-error faults); fp16 = native-dtype "
+                         "passthrough (bit-exact resume)")
     ap.add_argument("--use-flash", action="store_true",
                     help="ragged Pallas flash-decode (interpret off-TPU)")
     ap.add_argument("--chunk-size", type=int, default=None,
@@ -94,10 +114,13 @@ def main():
               f"Thres_DRAM={plan.thres_dram:.2f} "
               f"(worst LS inflation {plan.max_ls_inflation:.2f}x)")
 
+    grow = args.grow_pages or args.swap
     eng = ServingEngine(
         max_seq=args.prompt_len + args.max_new + 4,
         backend=args.backend, plan=plan, coloring=args.coloring,
-        paged=args.paged or args.prefix_cache, page_size=args.page_size,
+        paged=args.paged or args.prefix_cache or grow,
+        page_size=args.page_size,
+        grow_pages=grow, swap=args.swap, cold_dtype=args.cold_dtype,
         prefix_cache=args.prefix_cache, use_flash=args.use_flash,
         chunk_size=args.chunk_size, token_budget=args.token_budget,
         slots_ls=args.slots, slots_be=args.slots, device=args.gpu

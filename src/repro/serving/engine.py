@@ -104,6 +104,7 @@ from ..models import transformer as tf
 from .kv_cache import PagedKVCache, kv_bytes_per_token
 from .prefix_cache import PrefixCache
 from .scheduler import Phase, QuantumReport, TokenBudgetScheduler
+from .swap import HostSwapPool
 
 
 @dataclass
@@ -126,6 +127,15 @@ class Request:
     # to compute (a prefix-cache hit starts at its uncached suffix)
     phase: Phase = Phase.WAITING
     prefill_pos: int = 0
+    # KV-hierarchy state: a preempted request restarts from scratch; a
+    # swapped-out decode keeps its host page keys plus the decode state to
+    # resume from once the pages fault back in (SWAPPED -> SWAPPING)
+    swap_keys: Optional[list] = None   # host-tier keys, logical page order
+    swap_cursor: int = 0               # next page to fault in
+    resume_pos: int = 0                # rt.pos at swap-out
+    resume_tok: int = 0                # rt.last_tok at swap-out
+    t_evicted: Optional[float] = None  # set at preempt/swap-out, cleared at
+    preempts: int = 0                  # the resume token (warm-restart gap)
 
     @property
     def latency(self):
@@ -159,11 +169,19 @@ class _TenantRT:
     prefill_tokens: int = 0                 # prompt tokens admitted
     prefill_computed: int = 0               # prompt tokens actually prefilled
     tbt_gaps: List[float] = field(default_factory=list)  # inter-token gaps
+    # KV-hierarchy state (swap mode)
+    host: Optional[HostSwapPool] = None     # host tier for swapped pages
+    preemptions: int = 0                    # requests restarted from scratch
+    swap_outs: int = 0                      # decode page groups pushed to host
+    swap_ins: int = 0                       # page groups faulted back
+    grow_stalls: int = 0                    # decode quanta stalled on growth
+    resume_gaps: List[float] = field(default_factory=list)  # evict->token
     # sim-backend knobs / results
     closed_loop: bool = False
     sim_seq: Optional[int] = None
     max_kernels: int = 24
     sim_completed: int = 0
+    sim_swap_bytes: int = 0                 # modeled swap traffic per request
 
     def has_work(self) -> bool:
         return bool(self.queue) or any(r is not None for r in self.active)
@@ -251,6 +269,25 @@ class _JaxBackend:
                 rt.prefix = PrefixCache(eng.page_size, rt.kv)
             rt.cache = rt.kv.init_pools()
             rt.decode_fn = jax.jit(_decode_paged, donate_argnums=(2,))
+            if eng.swap:
+                rt.host = HostSwapPool(eng.cold_dtype,
+                                       tenant=rt.spec.name,
+                                       priority=rt.spec.priority,
+                                       nice=rt.spec.nice)
+                if rt.prefix is not None:
+                    # cold prefix tier: evicted leaves' pages survive on the
+                    # host and fault back in before a matching admission
+                    def _store(key, page, _rt=rt):
+                        _rt.host.drop(key)   # re-evicted after a re-donate
+                        _rt.host.put(_rt.cache, key, page, t=eng.clock())
+
+                    def _load(key, page, _rt=rt):
+                        _rt.cache, _ = _rt.host.get(_rt.cache, key, page,
+                                                    t=eng.clock())
+
+                    rt.prefix.cold_store = _store
+                    rt.prefix.cold_loader = _load
+                    rt.prefix.cold_has = lambda key, _rt=rt: key in _rt.host
         else:
             rt.cache = tf.init_cache(cfg, rt.n_slots, eng.max_seq)
             rt.decode_fn = jax.jit(_decode, donate_argnums=(2,))
@@ -280,6 +317,150 @@ class _JaxBackend:
         elif rt.kv is not None:
             rt.kv.free_slot(slot)
 
+    # -- KV hierarchy: growth / preemption / swap ----------------------
+    def _drop_slot_pages(self, rt: _TenantRT, slot: int):
+        """Free a slot's pages *without* donating to the prefix tree (the
+        preempt/swap-out path: the content either restarts from scratch or
+        already lives on the host)."""
+        if rt.prefix is not None:
+            rt.prefix.release_slot(slot, None, 0)
+        elif rt.kv is not None:
+            rt.kv.free_slot(slot)
+
+    def _youngest_victim(self, rt: _TenantRT, exclude: int
+                         ) -> Optional[Request]:
+        """Preemption victim under pool exhaustion: the youngest (latest
+        submit) other active request in this tenant's pool — least sunk
+        work, and it re-queues behind everything it raced. The growing slot
+        itself is excluded (self-preemption would livelock)."""
+        cands = [r for s, r in enumerate(rt.active)
+                 if r is not None and s != exclude
+                 and r.phase in (Phase.PREFILLING, Phase.DECODING)]
+        if not cands:
+            return None
+        return max(cands, key=lambda r: (r.t_submit, r.rid))
+
+    def _preempt(self, rt: _TenantRT, req: Request):
+        """Restart a victim from scratch (swap off, or a mid-prefill victim
+        with no resumable decode state): pages freed without donation, phase
+        back to WAITING, re-queued. Deterministic greedy decode makes the
+        restart emit identical tokens."""
+        s = req.slot
+        self._drop_slot_pages(rt, s)
+        rt.active[s] = None
+        rt.pos[s] = 0
+        rt.last_tok[s] = 0
+        req.t_evicted = self.engine.clock()
+        req.phase = Phase.WAITING
+        req.slot = None
+        req.prefill_pos = 0
+        req.output = None
+        req.t_first = req.t_last = req.t_admit = None
+        req.hit_tokens = 0
+        req.swap_keys = None
+        req.preempts += 1
+        rt.preemptions += 1
+        rt.queue.append(req)
+
+    def _swap_out(self, rt: _TenantRT, req: Request) -> int:
+        """Move a decoding victim's whole page group to the host tier:
+        page contents copied in logical order (quantized per ``cold_dtype``),
+        decode resume state saved, device pages freed without donation, the
+        request re-queued as SWAPPED. Returns pages moved."""
+        eng = self.engine
+        s, kv = req.slot, rt.kv
+        n = kv.mapped_count(s)
+        now = eng.clock()
+        keys = []
+        for j in range(n):
+            key = ("req", req.rid, j)
+            rt.host.drop(key)
+            rt.host.put(rt.cache, key, int(kv.page_table[s, j]), t=now)
+            keys.append(key)
+        req.swap_keys = keys
+        req.swap_cursor = 0
+        req.resume_pos = int(rt.pos[s])
+        req.resume_tok = int(rt.last_tok[s])
+        req.t_evicted = now
+        req.phase = Phase.SWAPPED
+        req.slot = None
+        self._drop_slot_pages(rt, s)
+        rt.active[s] = None
+        rt.pos[s] = 0
+        rt.last_tok[s] = 0
+        rt.swap_outs += 1
+        rt.queue.append(req)
+        return n
+
+    def _ensure_growth(self, rt: _TenantRT, slots: List[int]):
+        """Growth pre-pass before the decode batch: map the page each
+        decode write needs (growth-mode admission only reserved the
+        prompt's pages). On pool exhaustion: free cold prefix leaves first,
+        then swap out — or, with swap off / for a mid-prefill victim,
+        preempt — the youngest other active request; a slot that still
+        can't grow stalls out of this quantum's decode batch. Returns
+        (ready slots, pages swapped out)."""
+        eng = self.engine
+        kv = rt.kv
+        ready, out_pages = [], 0
+        for s in slots:
+            req = rt.active[s]
+            if req is None or req.phase is not Phase.DECODING:
+                continue          # taken as a victim by an earlier grower
+            if not kv.needs_grow(s, int(rt.pos[s])):
+                ready.append(s)
+                continue
+            grown = False
+            while True:
+                if kv.can_admit_pages(1):
+                    kv.grow_slot(s)
+                    grown = True
+                    break
+                if rt.prefix is not None and rt.prefix.evict_until(1):
+                    continue
+                victim = self._youngest_victim(rt, exclude=s)
+                if victim is None:
+                    break
+                if rt.host is not None and victim.phase is Phase.DECODING:
+                    out_pages += self._swap_out(rt, victim)
+                else:
+                    self._preempt(rt, victim)
+            if grown:
+                ready.append(s)
+            else:
+                rt.grow_stalls += 1
+        return ([s for s in ready if rt.active[s] is not None
+                 and rt.active[s].phase is Phase.DECODING], out_pages)
+
+    def _swap_progress(self, rt: _TenantRT) -> int:
+        """Fault host pages back into SWAPPING slots, up to the engine's
+        ``swap_quantum_pages`` per quantum — the SWAPPING phase is paced
+        across quanta so decode keeps ticking next to a fault storm. A
+        slot whose page group completes resumes DECODING where it left
+        off (pos + last token restored)."""
+        eng = self.engine
+        budget = eng.swap_quantum_pages
+        pages = 0
+        for s in eng.scheduler.swap_slots(rt):
+            if budget <= 0:
+                break
+            req = rt.active[s]
+            while budget > 0 and req.swap_cursor < len(req.swap_keys):
+                dst = int(rt.kv.page_table[s, req.swap_cursor])
+                rt.cache, _ = rt.host.get(
+                    rt.cache, req.swap_keys[req.swap_cursor], dst,
+                    t=eng.clock())
+                req.swap_cursor += 1
+                budget -= 1
+                pages += 1
+            if req.swap_cursor >= len(req.swap_keys):
+                rt.pos[s] = req.resume_pos
+                rt.last_tok[s] = req.resume_tok
+                req.phase = Phase.DECODING
+                req.swap_keys = None
+                rt.swap_ins += 1
+        return pages
+
     def _write_sentinel(self, rt: _TenantRT) -> int:
         """A cache position no batched call may write: dense caches drop any
         position >= max_seq; paged lookups drop any logical page >= the
@@ -300,6 +481,9 @@ class _JaxBackend:
         L = len(req.tokens)
         now = eng.clock()
         req.t_first = req.t_last = now
+        if req.t_evicted is not None:       # preempt-restart warm TTFT
+            rt.resume_gaps.append(now - req.t_evicted)
+            req.t_evicted = None
         req.phase = Phase.DECODING
         req.output = [int(first_tok)]
         rt.pos[s] = L
@@ -424,6 +608,9 @@ class _JaxBackend:
             if req.t_last is not None:
                 rt.tbt_gaps.append(now - req.t_last)
             req.t_last = now
+            if req.t_evicted is not None:   # first token after a swap-in
+                rt.resume_gaps.append(now - req.t_evicted)
+                req.t_evicted = None
             if len(req.output) >= max(req.max_new, 1) \
                     or rt.pos[s] >= eng.max_seq:
                 self._finish(rt, s)
@@ -441,17 +628,22 @@ class _JaxBackend:
         report = QuantumReport(rt.spec.name, rt.spec.priority,
                                budget=sched.budget_for(rt.spec.priority))
         dec = sched.decode_slots(rt)
+        if dec and eng.grow_pages and rt.kv is not None:
+            dec, report.swap_out_pages = self._ensure_growth(rt, dec)
         if dec:
             self._decode(rt, dec)
             report.decode_tokens = len(dec)
         admitted = sched.admit(rt, eng)
+        if rt.host is not None:
+            report.swap_in_pages = self._swap_progress(rt)
         if rt.chunk_fn is not None:
             chunks = sched.prefill_chunks(rt, len(dec))
             if chunks:
                 report.prefill_tokens = self._run_chunks(rt, chunks)
         elif admitted:
             report.prefill_tokens = self._prefill_monolithic(rt, admitted)
-        progressed = bool(dec or admitted or report.prefill_tokens)
+        progressed = bool(dec or admitted or report.prefill_tokens
+                          or report.swap_in_pages or report.swap_out_pages)
         if progressed:
             eng.quantum_log.append(report)
         return progressed
@@ -543,6 +735,14 @@ class _SimBackend:
                 step_k = Kernel(f * per, b * per,
                                 b / self.dev.hbm_bw > f / self.dev.peak_flops)
                 kern = kern + [step_k] * n_chunks
+            if rt.sim_swap_bytes > 0:
+                # KV swap traffic modeled as one memory-bound kernel at the
+                # resume point (right after prefill): with coloring on, its
+                # bytes drain at the owning class's ch_be bandwidth split,
+                # so BE swap storms never stretch LS decode gaps
+                kern = (kern[:n_prefill_k]
+                        + [Kernel(0.0, float(rt.sim_swap_bytes), True)]
+                        + kern[n_prefill_k:])
             tn = Tenant(name, rt.spec.priority, kern,
                         arrivals=arrivals or None,
                         closed_loop=rt.closed_loop,
@@ -593,6 +793,23 @@ class ServingEngine:
       page_size    tokens per KV page (paged mode).
       kv_pages     page-pool size override per tenant (default: dense-row
                    capacity equivalent, or the arena class capacity).
+      grow_pages   dynamic page growth: admit on ``ceil(prompt/page_size)``
+                   pages only and allocate decode pages at page-boundary
+                   crossings; on pool exhaustion the youngest other active
+                   request is preempted (or swapped out, with ``swap``)
+                   instead of the admission failing.
+      swap         host KV tier over the PCIe bus: preempted decode page
+                   groups and evicted prefix-tree leaves move to a
+                   per-tenant HostSwapPool instead of being discarded, and
+                   fault back in (a SWAPPED request re-admits into the
+                   SWAPPING phase; cold prefix pages re-adopt before
+                   planning).
+      cold_dtype   host-tier storage: "int8" (per-page abs-max scale,
+                   ~2-4x less host memory + bus traffic, bounded
+                   dequantization error) or "fp16" (native pool dtype,
+                   exact — swapped tokens stay bit-equal).
+      swap_quantum_pages  max host pages faulted back per engine quantum
+                   (paces swap-in next to live decode).
       use_flash    route decode attention through the ragged Pallas
                    flash-decode kernel (interpret mode off-TPU).
       chunk_size   max prefill tokens a request advances per quantum
@@ -623,13 +840,29 @@ class ServingEngine:
                  controller=None, control_interval: int = 4,
                  control_dt: float = 0.02, prefix_cache: bool = False,
                  prefix_min_hit: float = 0.0,
-                 migration_bytes: float = 0.0, seed: int = 0):
+                 migration_bytes: float = 0.0, seed: int = 0,
+                 grow_pages: bool = False, swap: bool = False,
+                 cold_dtype: str = "int8", swap_quantum_pages: int = 4):
         self.max_seq = max_seq
         self.paged = paged
         self.page_size = page_size
         self.kv_pages = kv_pages
         self.use_flash = use_flash
         self.chunk_size = chunk_size
+        # KV memory hierarchy: grow_pages admits on the prompt's pages only
+        # and allocates decode pages at boundary crossings (preempting the
+        # youngest request on exhaustion); swap adds the host tier — victims'
+        # page groups and evicted prefix leaves move over the PCIe bus
+        # instead of dying, stored per cold_dtype ("int8" quantized with a
+        # per-page scale, "fp16" exact native-dtype passthrough) and faulted
+        # back at most swap_quantum_pages per quantum
+        if (grow_pages or swap) and backend == "jax" and not paged:
+            raise ValueError("grow_pages/swap require paged=True")
+        self.grow_pages = grow_pages
+        self.swap = swap
+        assert cold_dtype in ("int8", "fp16"), cold_dtype
+        self.cold_dtype = cold_dtype
+        self.swap_quantum_pages = max(int(swap_quantum_pages), 1)
         # radix-tree copy-on-write KV page sharing (serving.prefix_cache):
         # common prompt prefixes map cached pages into new slots' tables and
         # only the uncached suffix is prefilled
@@ -705,7 +938,7 @@ class ServingEngine:
     def add_tenant(self, spec: TenantSpec, cfg: ModelConfig, params=None,
                    key=None, n_slots: Optional[int] = None,
                    closed_loop: bool = False, sim_seq: Optional[int] = None,
-                   max_kernels: int = 24):
+                   max_kernels: int = 24, sim_swap_bytes: int = 0):
         if params is None and self.backend_name == "jax":
             params = tf.init_params(
                 key if key is not None
@@ -729,7 +962,7 @@ class ServingEngine:
         rt = _TenantRT(spec, cfg, params, decode_fn=None, prefill_fn=None,
                        n_slots=n_slots,
                        closed_loop=closed_loop, sim_seq=sim_seq,
-                       max_kernels=max_kernels)
+                       max_kernels=max_kernels, sim_swap_bytes=sim_swap_bytes)
         self.backend.add_tenant(rt)
         self._tie_rank[spec.name] = float(self._tie_rng.random())
         if self.arena is not None and not self.paged:
@@ -1021,6 +1254,15 @@ class ServingEngine:
                                          "page_size": rt.kv.page_size}
             if rt.prefix is not None:
                 out[name]["prefix_cache"] = rt.prefix.stats()
+            if rt.host is not None or rt.preemptions or rt.grow_stalls:
+                sw = {"preemptions": rt.preemptions,
+                      "swap_outs": rt.swap_outs,
+                      "swap_ins": rt.swap_ins,
+                      "grow_stalls": rt.grow_stalls,
+                      "resume": self._pcts(rt.resume_gaps)}
+                if rt.host is not None:
+                    sw["host"] = rt.host.stats()
+                out[name]["swap"] = sw
             if rt.prefill_tokens:
                 out[name]["prefill_tokens"] = {
                     "admitted": rt.prefill_tokens,

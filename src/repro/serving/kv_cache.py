@@ -134,6 +134,10 @@ class PagedKVCache:
         self.slot_shared_idx: List[set] = [set() for _ in range(n_slots)]
         self.slot_reserve: List[List[int]] = [[] for _ in range(n_slots)]
         self.cow_forks = 0
+        # pages appended by grow_slot in non-sharing arena mode carry their
+        # own per-page arena groups (the slot's base group was sized at
+        # admission and can't be extended in place)
+        self.slot_grown: List[List[int]] = [[] for _ in range(n_slots)]
 
     def _slot_group(self, slot: int, page: int) -> str:
         """Arena group of one slot-owned page (sharing mode: one group per
@@ -201,6 +205,72 @@ class PagedKVCache:
         self.page_table[slot, :n] = pages
         self._pt_dev = None
         return pages
+
+    # -- dynamic growth (KV hierarchy tier 1) --------------------------
+    def mapped_count(self, slot: int) -> int:
+        """Mapped page-table entries for ``slot`` (shared + private)."""
+        return int(np.sum(self.page_table[slot] < self.n_pages))
+
+    def needs_grow(self, slot: int, pos: int) -> bool:
+        """True when a token write at ``pos`` would land on an unmapped
+        page-table entry — the caller must :meth:`grow_slot` first (after
+        making room: evict a prefix leaf, swap out, or preempt)."""
+        j = pos // self.page_size
+        return j < self.pages_per_slot and \
+            int(self.page_table[slot, j]) >= self.n_pages
+
+    def grow_slot(self, slot: int) -> int:
+        """Append one private page at the slot's first unmapped table entry
+        (decode crossed a page boundary under growth-mode admission, which
+        only reserved the prompt's pages)."""
+        j = self.mapped_count(slot)
+        assert j < self.pages_per_slot, f"slot {slot} already at max extent"
+        if not self.free_list:
+            raise OutOfColoredMemory(f"{self.name}: no free page to grow")
+        if self.arena is not None:
+            if self.arena.free_pages(self.channels) < self._arena_pages(1):
+                raise OutOfColoredMemory(
+                    f"{self.name}: no colored page to grow")
+        page = self.free_list.pop()
+        self.page_ref[page] = 1
+        if self.arena is not None:
+            self.arena.alloc(self._slot_group(slot, page),
+                             self.bytes_per_page, self.channels)
+            if not self.sharing:
+                self.slot_grown[slot].append(page)
+        self.slot_pages[slot].append(page)
+        self.page_table[slot, j] = page
+        self._pt_dev = None
+        return page
+
+    def alloc_slot_pages(self, slot: int, n: int) -> List[int]:
+        """Map exactly ``n`` private pages into an empty slot (swap-in
+        restore: the faulting request's page-group size is known in pages,
+        not tokens)."""
+        assert not self.slot_pages[slot] and not self.slot_shared[slot], \
+            f"slot {slot} already mapped"
+        pages = self._alloc_pages(slot, n)
+        self.slot_pages[slot] = pages
+        self.page_table[slot, :n] = pages
+        self._pt_dev = None
+        return pages
+
+    def tree_adopt_page(self, node_group: str) -> int:
+        """Allocate one page directly owned by a radix-tree node (a cold
+        prefix fault restores an evicted leaf's page from the host tier
+        without a slot intermediary). Inverse of :meth:`tree_release_page`.
+        Sharing mode only."""
+        assert self.sharing
+        if not self.free_list:
+            raise OutOfColoredMemory(f"{self.name}: no page for cold fault")
+        if self.arena is not None:
+            if self.arena.free_pages(self.channels) < self._arena_pages(1):
+                raise OutOfColoredMemory(
+                    f"{self.name}: no colored page for cold fault")
+            self.arena.alloc(node_group, self.bytes_per_page, self.channels)
+        page = self.free_list.pop()
+        self.page_ref[page] = 1
+        return page
 
     # -- sharing primitives (driven by serving.prefix_cache) -----------
     def share(self, slot: int, pages: Sequence[int]):
@@ -303,9 +373,12 @@ class PagedKVCache:
             self.free_list.append(p)
             if self.arena is not None and self.sharing:
                 self.arena.release(self._slot_group(slot, p))
-        if self.arena is not None and not self.sharing and \
-                self.slot_pages[slot]:
-            self.arena.release(f"{self.name}:s{slot}")
+        if self.arena is not None and not self.sharing:
+            for p in self.slot_grown[slot]:
+                self.arena.release(self._slot_group(slot, p))
+            if len(self.slot_pages[slot]) > len(self.slot_grown[slot]):
+                self.arena.release(f"{self.name}:s{slot}")
+        self.slot_grown[slot] = []
         self.slot_pages[slot] = []
         self.slot_shared[slot] = []
         self.slot_shared_idx[slot] = set()
@@ -339,8 +412,13 @@ class PagedKVCache:
             return {self._slot_group(s, p): self.channels
                     for s in range(self.n_slots)
                     for p in self.slot_pages[s] + self.slot_reserve[s]}
-        return {f"{self.name}:s{s}": self.channels
-                for s in range(self.n_slots) if self.slot_pages[s]}
+        out = {f"{self.name}:s{s}": self.channels
+               for s in range(self.n_slots)
+               if len(self.slot_pages[s]) > len(self.slot_grown[s])}
+        out.update({self._slot_group(s, p): self.channels
+                    for s in range(self.n_slots)
+                    for p in self.slot_grown[s]})
+        return out
 
     # -- device-side structures ----------------------------------------
     def init_pools(self, dtype=None):

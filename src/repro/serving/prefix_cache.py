@@ -129,6 +129,16 @@ class PrefixCache:
         self.prompt_tokens = 0
         self.evictions = 0
         self.inserted = 0
+        # cold-tier hooks (set by the engine when swap is on): an evicted
+        # leaf's page content moves to the host tier instead of dying, keyed
+        # by its full root->leaf token path, and admission re-adopts
+        # matching host pages before planning (fault_cold). All optional —
+        # None keeps the discard-on-evict behaviour.
+        self.cold_store = None       # (key, page) -> None: device -> host
+        self.cold_loader = None      # (key, page) -> None: host -> device
+        self.cold_has = None         # (key) -> bool
+        self.cold_faults = 0
+        self.cold_stores = 0
 
     # -- tree walk -----------------------------------------------------
     def _walk(self, tokens):
@@ -266,11 +276,27 @@ class PrefixCache:
     def _attach(self, node: RadixNode, nd: RadixNode):
         node.children.setdefault(nd.tokens[0], []).append(nd)
 
+    def _path_key(self, nd: RadixNode) -> tuple:
+        """Cold-tier key: the node's full root->leaf token path (the only
+        stable identity a re-attached node can be matched back by)."""
+        chunks = []
+        while nd is not None and nd.parent is not None:
+            chunks.append(nd.tokens)
+            nd = nd.parent
+        return tuple(t for chunk in reversed(chunks) for t in chunk)
+
     def _evict(self, nd: RadixNode, count: bool = True):
         lst = nd.parent.children[nd.tokens[0]]
         lst.remove(nd)
         if not lst:
             del nd.parent.children[nd.tokens[0]]
+        if count and self.cold_store is not None:
+            # cold tier: the leaf's page survives eviction on the host
+            # (quantized per the pool's cold_dtype) instead of being
+            # discarded — fault_cold re-adopts it on the next matching
+            # admission, saving the suffix's re-prefill
+            self.cold_store(self._path_key(nd), nd.page)
+            self.cold_stores += 1
         self.kv.tree_release_page(nd.page, nd.name)
         if count:
             self.evictions += 1
@@ -301,6 +327,40 @@ class PrefixCache:
                 return False
             self._evict(victim)
         return True
+
+    def fault_cold(self, tokens) -> int:
+        """Re-adopt cold-tier pages matching this prompt before admission
+        planning: walk to the tree's frontier and, while the next full-page
+        chunk's root->leaf key is resident on the host and a device page is
+        admissible, adopt a fresh tree page and fault the host content into
+        it. Returns pages faulted (0 when the frontier diverges inside a
+        page — nothing below a partial match is usable)."""
+        if self.cold_loader is None or self.kv is None:
+            return 0
+        toks = tuple(int(t) for t in tokens)
+        ps = self.page_size
+        path, i = self._walk(toks)
+        if i % ps:
+            return 0
+        node = path[-1] if path else self.root
+        faulted = 0
+        self._tick += 1
+        while i + ps <= len(toks):
+            key = toks[:i + ps]
+            if not self.cold_has(key) or not self.kv.can_admit_pages(1):
+                break
+            name = f"{self.kv.name}:px{self._next_id}"
+            self._next_id += 1
+            page = self.kv.tree_adopt_page(name)
+            self.cold_loader(key, page)
+            nd = RadixNode(toks[i:i + ps], page, node, name)
+            nd.last_used = self._tick
+            self._attach(node, nd)
+            node = nd
+            i += ps
+            faulted += 1
+            self.cold_faults += 1
+        return faulted
 
     # -- tidal recolor / pinning ---------------------------------------
     def recolor(self, new_channels: Sequence[int]) -> dict:
@@ -360,6 +420,9 @@ class PrefixCache:
             "evictions": self.evictions,
             "inserted": self.inserted,
         }
+        if self.cold_store is not None:
+            out["cold_stores"] = self.cold_stores
+            out["cold_faults"] = self.cold_faults
         if self.kv is not None:
             out["cow_forks"] = self.kv.cow_forks
         return out

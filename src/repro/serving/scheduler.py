@@ -50,10 +50,18 @@ _INF = float("inf")
 
 
 class Phase(Enum):
-    """Request lifecycle in the serving engine (see module docstring)."""
+    """Request lifecycle in the serving engine (see module docstring).
+
+    The KV hierarchy adds two states: a decode request whose page group was
+    swapped out to the host tier re-queues as ``SWAPPED`` (no slot, pages on
+    host); re-admission moves it to ``SWAPPING`` (slot + fresh pages held,
+    host pages faulting back in over the PCIe bus a few per quantum) and
+    from there to ``DECODING`` once the last page lands."""
     WAITING = "waiting"          # queued, no slot
     PREFILLING = "prefilling"    # slot + pages held; prompt partially computed
     DECODING = "decoding"        # prompt done, emitting tokens
+    SWAPPED = "swapped"          # preempted to host tier, queued for re-entry
+    SWAPPING = "swapping"        # slot held, host pages faulting back in
     FINISHED = "finished"        # done (or failed)
 
 
@@ -78,6 +86,8 @@ class QuantumReport:
     decode_tokens: int = 0
     prefill_tokens: int = 0
     budget: Optional[int] = None
+    swap_in_pages: int = 0       # host pages faulted back this quantum
+    swap_out_pages: int = 0      # pages pushed to the host tier this quantum
 
     @property
     def tokens(self) -> int:
@@ -143,15 +153,26 @@ class TokenBudgetScheduler:
         return [s for s, r in enumerate(rt.active)
                 if r is not None and r.phase is Phase.DECODING]
 
+    def swap_slots(self, rt) -> List[int]:
+        """Slots mid swap-in fault — the engine restores a few host pages
+        per quantum (its ``swap_quantum_pages`` pacing) until the page
+        group is complete and the slot flips back to DECODING."""
+        return [s for s, r in enumerate(rt.active)
+                if r is not None and r.phase is Phase.SWAPPING]
+
     # -- admission -----------------------------------------------------
     def order_queue(self, rt) -> List:
-        """Waiting queue in admission order: predicted cached-prefix length
-        descending when ``hit_aware`` (python sort is stable, so ties keep
-        FIFO), plain FIFO otherwise."""
-        if not self.hit_aware or rt.prefix is None or len(rt.queue) <= 1:
-            return list(rt.queue)
-        return sorted(rt.queue,
-                      key=lambda r: -rt.prefix.match_len(r.tokens))
+        """Waiting queue in admission order: SWAPPED requests first (they
+        were already admitted once and hold host-tier state whose value
+        decays), then WAITING by predicted cached-prefix length descending
+        when ``hit_aware`` (python sort is stable, so ties keep FIFO),
+        plain FIFO otherwise."""
+        swapped = [r for r in rt.queue if r.phase is Phase.SWAPPED]
+        waiting = [r for r in rt.queue if r.phase is not Phase.SWAPPED]
+        if self.hit_aware and rt.prefix is not None and len(waiting) > 1:
+            waiting = sorted(waiting,
+                             key=lambda r: -rt.prefix.match_len(r.tokens))
+        return swapped + waiting
 
     def admit(self, rt, eng) -> List:
         """Move admissible WAITING requests into free slots (slot + pages
@@ -179,8 +200,33 @@ class TokenBudgetScheduler:
         for req in self.order_queue(rt):
             if not free:
                 break
-            need = min(len(req.tokens) + req.max_new, eng.max_seq)
-            if rt.kv.pages_for(need) > rt.kv.n_pages:
+            if req.phase is Phase.SWAPPED:
+                # re-admission of a swapped-out decode: its page-group size
+                # is fixed (host keys), fresh pages are allocated now and
+                # the engine faults the host pages in over the next quanta
+                n = len(req.swap_keys)
+                while not rt.kv.can_admit_pages(n):
+                    if rt.prefix is None or not rt.prefix.evict_until(n):
+                        break
+                if not rt.kv.can_admit_pages(n):
+                    break
+                req.slot = free.pop(0)
+                rt.kv.alloc_slot_pages(req.slot, n)
+                req.phase = Phase.SWAPPING
+                req.swap_cursor = 0
+                rt.active[req.slot] = req
+                rt.peak_active = max(rt.peak_active,
+                                     sum(r is not None for r in rt.active))
+                rt.queue.remove(req)
+                taken.append(req)
+                continue
+            full = min(len(req.tokens) + req.max_new, eng.max_seq)
+            # growth mode admits on the prompt's pages only; decode pages
+            # are allocated at page-boundary crossings (grow_slot), so the
+            # can-never-fit check still uses the full extent
+            need = (min(len(req.tokens), eng.max_seq) if eng.grow_pages
+                    else full)
+            if rt.kv.pages_for(full) > rt.kv.n_pages:
                 # can never fit, even with an empty pool: fail it rather
                 # than deadlock the queue forever
                 req.t_done = eng.clock()
@@ -190,6 +236,11 @@ class TokenBudgetScheduler:
                 rt.queue.remove(req)
                 rt.done.append(req)
                 continue
+            if rt.prefix is not None:
+                # cold tier: re-adopt swapped-out prefix pages matching this
+                # prompt before planning — a faulted page is a shared page
+                # the plan doesn't have to re-prefill
+                rt.prefix.fault_cold(req.tokens)
             plan, admitted = None, False
             while True:
                 plan = (rt.prefix.plan(req.tokens, need)

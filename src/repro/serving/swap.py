@@ -1,18 +1,39 @@
-"""Model-swapping over the interconnect (paper scenario #2, §8.4): DNNs live
-in host memory and must be streamed to the device before serving; the PCIe
-scheduler decides who gets the bus. PipeSwitch-style pipelining overlaps
-layer transfer with layer execution (§7).
+"""Host<->device swapping over the interconnect.
+
+Two swap flows share the PCIe bus model (``core.pcie``):
+
+* **Model swapping** (paper scenario #2, §8.4): DNNs live in host memory and
+  must be streamed to the device before serving; the PCIe scheduler decides
+  who gets the bus. PipeSwitch-style pipelining overlaps layer transfer with
+  layer execution (§7) — :func:`pipelined_serve_time` / :func:`swap_requests`.
+
+* **KV page swapping** (the KV memory hierarchy's middle + cold tiers):
+  instead of discarding cold KV pages under pool pressure, the serving
+  engine moves them to a :class:`HostSwapPool` — preempted decode requests'
+  page groups and zero-ref prefix-tree leaves survive a tide on the host and
+  fault back in over the bus instead of being recomputed. The host tier
+  stores pages either **exact** (``cold_dtype="fp16"``: the pool's native
+  dtype, so a fp16/fp32 pool round-trips bit-identically and resumed tokens
+  are bit-equal to a never-swapped run) or **quantized** (``cold_dtype=
+  "int8"``: per-page-per-leaf abs-max scale, 2-4x less host memory and bus
+  traffic at a bounded dequantization error). Every put/get is logged as a
+  :class:`~repro.core.pcie.bus.CopyRequest`, so swap traffic can be replayed
+  through the :class:`~repro.core.pcie.cfs.PCIeCFS` against concurrent
+  weight streaming (:func:`page_swap_requests` builds the same flows
+  analytically for contention studies).
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
-from typing import List
+from typing import Dict, List, Optional, Tuple
 
+import jax
 import numpy as np
 
 from ..configs.base import ModelConfig
 from ..core.costmodel import model_costs, param_count
-from ..core.pcie.bus import BusSpec, CopyRequest
+from ..core.pcie.bus import BusSpec, CopyRequest, bw_of
 from ..core.simulator import DeviceSpec
 
 
@@ -50,3 +71,194 @@ def swap_requests(cfg: ModelConfig, tenant: str, priority: str, nice: int,
             out.append(CopyRequest(rid0 + i * 1000 + j, tenant, priority,
                                    nice, size // n, "h2d", t))
     return out
+
+
+def page_swap_requests(tenant: str, priority: str, nice: int,
+                       page_bytes: int, n_pages: int, direction: str,
+                       arrivals: List[float],
+                       rid0: int = 20_000_000) -> List[CopyRequest]:
+    """Analytic KV page-group swap flow for PCIe contention studies: each
+    arrival moves ``n_pages`` pages of ``page_bytes`` as one page-granular
+    copy each (the CFS interleaves at packet granularity either way)."""
+    out = []
+    for i, t in enumerate(arrivals):
+        for j in range(n_pages):
+            out.append(CopyRequest(rid0 + i * 1000 + j, tenant, priority,
+                                   nice, page_bytes, direction, t))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# KV page host tier (middle tier of the KV memory hierarchy)
+# ---------------------------------------------------------------------------
+
+def quantize_page(arr: np.ndarray) -> Tuple[np.ndarray, float]:
+    """Per-page abs-max int8 quantization of one pool-leaf page slice.
+    Returns (int8 data, scale); ``dequantize_page`` inverts it with error
+    bounded by ``scale / 2 = max|x| / 254`` per element."""
+    a = np.asarray(arr)
+    scale = float(np.max(np.abs(a))) / 127.0 if a.size else 0.0
+    if scale == 0.0:
+        return np.zeros(a.shape, np.int8), 0.0
+    q = np.clip(np.round(a.astype(np.float32) / scale), -127, 127)
+    return q.astype(np.int8), scale
+
+
+def dequantize_page(q: np.ndarray, scale: float) -> np.ndarray:
+    return q.astype(np.float32) * scale
+
+
+@dataclass
+class _HostPage:
+    """One swapped KV page: per-pool-leaf host arrays (flat, in pool tree
+    order) plus per-leaf scales when quantized (None = exact)."""
+    leaves: List[np.ndarray]
+    scales: Optional[List[float]]
+    nbytes: int
+
+
+def _page_leaves(pools) -> List[Tuple[object, int]]:
+    """Flatten a paged-cache pytree into (leaf, page_axis) pairs in a
+    deterministic order. ``layers`` leaves are [n_periods, n_pages, ...]
+    (page axis 1, from the layer scan); ``prefix`` entries are per-layer
+    trees with page axis 0."""
+    out = []
+    if "prefix" in pools:
+        for pp in pools["prefix"]:
+            out += [(l, 0) for l in jax.tree.leaves(pp)]
+    out += [(l, 1) for l in jax.tree.leaves(pools["layers"])]
+    return out
+
+
+def _rebuild(pools, new_leaves: List[object]):
+    """Inverse of :func:`_page_leaves`: rebuild the pools pytree from the
+    flat leaf list (same deterministic order)."""
+    it = iter(new_leaves)
+    out = dict(pools)
+    if "prefix" in pools:
+        out["prefix"] = [
+            jax.tree.unflatten(jax.tree.structure(pp),
+                               [next(it) for _ in jax.tree.leaves(pp)])
+            for pp in pools["prefix"]]
+    out["layers"] = jax.tree.unflatten(
+        jax.tree.structure(pools["layers"]),
+        [next(it) for _ in jax.tree.leaves(pools["layers"])])
+    return out
+
+
+@functools.partial(jax.jit, donate_argnums=(0,),
+                   static_argnames=("page_axis",))
+def _write_page(pool, data, page, *, page_axis):
+    ix = (slice(None),) * page_axis
+    return pool.at[ix + (page,)].set(data.astype(pool.dtype))
+
+
+class HostSwapPool:
+    """Host-memory tier for swapped KV pages.
+
+    ``put`` copies one device page (every pool leaf's slice) to host arrays
+    — quantized int8 with a per-leaf abs-max scale when ``cold_dtype=
+    "int8"``, the pool's native dtype when ``"fp16"`` (exact: a native-dtype
+    round trip is bit-identical, so fp16-mode swap never changes a token).
+    ``get`` writes it back into a (possibly different) destination device
+    page, dequantizing, and drops the host copy. Both directions are logged
+    as :class:`CopyRequest` flows (``d2h`` puts, ``h2d`` gets) so swap
+    traffic can be replayed through the PCIe CFS and charged against the
+    owning class's bandwidth; :meth:`pcie_seconds` is the uncontended bus
+    occupancy of everything logged so far."""
+
+    def __init__(self, cold_dtype: str = "int8", *, tenant: str = "kv",
+                 priority: str = "BE", nice: int = 1,
+                 bus: Optional[BusSpec] = None):
+        assert cold_dtype in ("int8", "fp16"), cold_dtype
+        self.cold_dtype = cold_dtype
+        self.tenant, self.priority, self.nice = tenant, priority, nice
+        self.bus = bus or BusSpec()
+        self.pages: Dict[object, _HostPage] = {}
+        self.copies: List[CopyRequest] = []
+        self.bytes_to_host = 0
+        self.bytes_to_device = 0
+        self.puts = 0
+        self.gets = 0
+        self._rid = 0
+
+    def __contains__(self, key) -> bool:
+        return key in self.pages
+
+    def __len__(self) -> int:
+        return len(self.pages)
+
+    @property
+    def host_bytes(self) -> int:
+        return sum(p.nbytes for p in self.pages.values())
+
+    def _log(self, size: int, direction: str, t: float):
+        self.copies.append(CopyRequest(self._rid, self.tenant, self.priority,
+                                       self.nice, size, direction, t))
+        self._rid += 1
+
+    # -- device -> host ------------------------------------------------
+    def put(self, pools, key, page: int, t: float = 0.0) -> int:
+        """Copy device page ``page`` to host under ``key``; returns the
+        bytes moved over the bus (the cold tier's compressed size)."""
+        assert key not in self.pages, key
+        leaves, scales, nbytes = [], [], 0
+        for leaf, _ax in _page_leaves(pools):
+            ix = (slice(None),) * _ax
+            data = np.asarray(leaf[ix + (page,)])
+            if self.cold_dtype == "int8":
+                q, s = quantize_page(data)
+                leaves.append(q)
+                scales.append(s)
+                nbytes += q.nbytes
+            else:
+                leaves.append(data.copy())
+                nbytes += data.nbytes
+        self.pages[key] = _HostPage(leaves,
+                                    scales if self.cold_dtype == "int8"
+                                    else None, nbytes)
+        self.bytes_to_host += nbytes
+        self.puts += 1
+        self._log(nbytes, "d2h", t)
+        return nbytes
+
+    # -- host -> device (fault) ----------------------------------------
+    def get(self, pools, key, dest_page: int, t: float = 0.0):
+        """Fault the host page ``key`` back into device page ``dest_page``
+        (dequantizing in int8 mode) and drop the host copy. Returns
+        (updated pools, bytes moved)."""
+        hp = self.pages.pop(key)
+        flat = [l for l, _ in _page_leaves(pools)]
+        axes = [a for _, a in _page_leaves(pools)]
+        out = []
+        for i, leaf in enumerate(flat):
+            data = hp.leaves[i]
+            if hp.scales is not None:
+                data = dequantize_page(data, hp.scales[i])
+            out.append(_write_page(leaf, data, dest_page,
+                                   page_axis=axes[i]))
+        self.bytes_to_device += hp.nbytes
+        self.gets += 1
+        self._log(hp.nbytes, "h2d", t)
+        return _rebuild(pools, out), hp.nbytes
+
+    def drop(self, key):
+        self.pages.pop(key, None)
+
+    # -- accounting ----------------------------------------------------
+    def pcie_seconds(self) -> float:
+        """Uncontended bus occupancy of every logged swap copy (per-DMA
+        overhead + bytes/bw per direction) — the modeled PCIe time the
+        engine reports next to its wall-clock metrics."""
+        return sum(self.bus.call_overhead_s + c.size / bw_of(self.bus,
+                                                            c.direction)
+                   for c in self.copies)
+
+    def stats(self) -> dict:
+        return {"cold_dtype": self.cold_dtype,
+                "pages_resident": len(self.pages),
+                "host_bytes": self.host_bytes,
+                "puts": self.puts, "gets": self.gets,
+                "bytes_to_host": self.bytes_to_host,
+                "bytes_to_device": self.bytes_to_device,
+                "pcie_s": self.pcie_seconds()}

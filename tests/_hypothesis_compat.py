@@ -27,6 +27,22 @@ except ImportError:
             items = list(seq)
             return _Strategy(lambda rng: items[int(rng.integers(len(items)))])
 
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+        @staticmethod
+        def tuples(*strats):
+            return _Strategy(
+                lambda rng: tuple(s.sample(rng) for s in strats))
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            def sample(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elem.sample(rng) for _ in range(n)]
+            return _Strategy(sample)
+
     st = _St()
 
     def settings(**kw):
