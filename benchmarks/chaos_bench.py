@@ -1,0 +1,234 @@
+"""Chaos bench: replay a diurnal LS/BE trace under a seeded fault storm and
+measure how much of the LS SLO the recovery paths preserve, emitting
+``BENCH_chaos.json``.
+
+The workload is the tidal-lending shape from the controller benches: LS
+traffic arrives in bursts (day) separated by idle valleys (night) while BE
+keeps a standing backlog of long prompts that grow pages and spill to the
+host tier. An ``OnlineController`` walks a two-plan frontier (full lending
+at zero LS load, conservative split under load). On top of this the
+``FaultPlane`` schedules a storm that hits every seam at once:
+
+  * ``ctl_missed_tick`` / ``ctl_stale_signal`` windows aligned with LS
+    burst onsets — the controller goes dark exactly when snap-back matters;
+  * ``swap_write_fail`` / ``swap_read_fail`` windows over the host tier;
+  * ``alloc_fail`` windows over the paged allocator;
+  * ``page_corrupt`` points rotting cold pages between put and get.
+
+Four modes replay the identical submission set and storm schedule:
+
+  * ``clean``          — no faults: the reference streams and SLO;
+  * ``storm_recovery`` — storm on, recovery on (watchdog, retry/backoff,
+                         deadline shedding, checksummed cold pages,
+                         degradation ladders);
+  * ``storm_naive``    — same storm, ``fault_recovery=False``: no
+                         watchdog, blind swap retries, no shedding;
+  * two extra seeded ``storm_recovery`` replays for the determinism check.
+
+Measured under the virtual token clock: LS SLO attainment over *all*
+submitted LS requests (an unfinished or shed LS request is a violation,
+not a dropped sample), BE goodput (completed tokens), injected /
+recovered / shed counters, and the watchdog trip count.
+
+Headline ``summary.pass``: storm_recovery holds LS SLO >= 0.95 AND
+storm_naive measurably collapses (<= storm_recovery - 0.15 or below 0.8)
+AND two identically-seeded runs produce an identical injected-event log
+and identical LS token streams. ``--smoke`` shrinks the trace for CI;
+``--out PATH`` overrides the JSON path.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.core.controller import OnlineController, PlanFrontier, ResourcePlan
+from repro.core.tenancy import TenantSpec
+from repro.serving import FaultEvent, FaultPlane, ServingEngine
+
+from .common import Rows
+
+PAGE = 4
+MAX_SEQ = 32
+KV_PAGES = 12
+LS_MAX_NEW = 4
+BE_MAX_NEW = 24
+SLO_TICKS = 25.0         # LS deadline in virtual ticks (submit -> done):
+                         # ~2x the worst recovery-mode burst latency, well
+                         # under the dark-controller starvation the naive
+                         # mode shows at burst onsets
+
+
+def _controller():
+    lend = ResourcePlan(1.0, 1.0, 0.5, (), (), 2.0)
+    cons = ResourcePlan(0.1, 1 / 6, 0.5, (), (), 2.0, prefill_budget=8)
+    return OnlineController(PlanFrontier([(0.0, lend), (1.0, cons)]),
+                            idle_patience=1)
+
+
+def _trace(n_bursts, ls_per_burst, be_per_period, period=200.0):
+    """Diurnal arrivals: (t, cls, prompt, max_new). BE keeps a *standing*
+    backlog — long-generation requests arriving steadily across the whole
+    horizon, so the lending plan always has BE work to favour when the
+    controller goes dark; each LS burst opens at k*period and runs for
+    ~half the period."""
+    rng = np.random.default_rng(7)
+    out = []
+    n_be = be_per_period * n_bursts
+    horizon = n_bursts * period
+    for i in range(n_be):
+        out.append((i * horizon / n_be, "be0",
+                    rng.integers(0, 100, 8).astype(np.int32), BE_MAX_NEW))
+    for k in range(n_bursts):
+        base = k * period
+        for j in range(ls_per_burst):
+            t = base + j * (period / 2 / max(ls_per_burst, 1))
+            out.append((float(t), "ls0",
+                        rng.integers(0, 100, 6).astype(np.int32),
+                        LS_MAX_NEW))
+    out.sort(key=lambda e: e[0])
+    return out
+
+
+def _storm(n_bursts, period=200.0):
+    """Deterministic storm, phase-locked to the trace: the controller goes
+    dark across every burst onset, the host tier misbehaves through the
+    valleys, and cold pages rot throughout."""
+    evs = []
+    for k in range(n_bursts):
+        base = k * period
+        evs.append(FaultEvent(base - 10.0, "ctl_stale_signal",
+                              duration=20.0))
+        evs.append(FaultEvent(base, "ctl_missed_tick",
+                              duration=period * 0.4))
+        evs.append(FaultEvent(base + period * 0.5, "swap_write_fail",
+                              duration=period * 0.2, target="be0"))
+        evs.append(FaultEvent(base + period * 0.7, "swap_read_fail",
+                              duration=period * 0.15, target="be0"))
+        evs.append(FaultEvent(base + period * 0.25, "alloc_fail",
+                              duration=period * 0.1, target="be0"))
+        for j in range(4):
+            evs.append(FaultEvent(base + j * period / 4, "page_corrupt",
+                                  target="be0"))
+    return [e for e in evs if e.t >= 0.0]
+
+
+def _serve(cfg, params, trace, *, faults=None, recovery=True, horizon):
+    state = {"t": 0.0}
+    eng = ServingEngine(
+        max_seq=MAX_SEQ, paged=True, page_size=PAGE, kv_pages=KV_PAGES,
+        chunk_size=PAGE, grow_pages=True, swap=True, cold_dtype="fp16",
+        slots_ls=4, slots_be=4, controller=_controller(),
+        control_interval=2, faults=faults, fault_recovery=recovery,
+        now_fn=lambda: state["t"])
+    eng.add_tenant(TenantSpec("ls0", "LS"), cfg, params=params)
+    eng.add_tenant(TenantSpec("be0", "BE"), cfg, params=params)
+
+    pending = list(trace)
+    reqs, stall = [], 0
+    while pending or any(rt.has_work() for rt in eng.tenants.values()):
+        while pending and pending[0][0] <= state["t"]:
+            t0, cls, prompt, max_new = pending.pop(0)
+            dl = SLO_TICKS if cls == "ls0" and recovery else None
+            reqs.append((cls, eng.submit(cls, prompt, max_new=max_new,
+                                         deadline=dl)))
+        progressed = eng.step()
+        state["t"] += 1.0
+        if progressed:
+            stall = 0
+        elif not pending:
+            stall += 1
+            if stall > 2000:
+                break                    # wedged: remaining LS = violations
+        if state["t"] > horizon:
+            break
+
+    ls = [r for cls, r in reqs if cls == "ls0"]
+    be = [r for cls, r in reqs if cls == "be0"]
+    ls_ok = [r for r in ls
+             if not r.failed and r.t_done is not None
+             and len(r.output or []) == LS_MAX_NEW
+             and (r.t_done - r.t_submit) <= SLO_TICKS]
+    be_tokens = sum(len(r.output or []) for r in be if not r.failed)
+    m = eng.metrics()
+    return {
+        "ls_submitted": len(ls),
+        "ls_within_slo": len(ls_ok),
+        "ls_slo": len(ls_ok) / max(len(ls), 1),
+        "be_goodput_tokens": be_tokens,
+        "be_shed": sum(1 for r in be if r.shed),
+        "watchdog_trips": m.get("faults", {}).get("watchdog_trips", 0),
+        "faults": m.get("faults"),
+        "ticks": float(state["t"]),
+        "_ls_outputs": [list(r.output or []) for r in ls],
+        "_fault_log": [dict(e) for e in faults.log] if faults else [],
+    }
+
+
+def run(smoke: bool = False, out_path: str = "BENCH_chaos.json") -> Rows:
+    rows = Rows()
+    n_bursts = 2 if smoke else 3
+    ls_per_burst = 3 if smoke else 5
+    be_per_period = 10 if smoke else 14
+    horizon = n_bursts * 200.0 + 2000.0
+
+    cfg = smoke_config("stablelm-1.6b").replace(num_layers=1,
+                                                activation_dtype="float32")
+    from repro.models import transformer as tf
+    import jax
+    params = tf.init_params(jax.random.key(7), cfg)
+    trace = _trace(n_bursts, ls_per_burst, be_per_period)
+    mk_storm = lambda: FaultPlane(_storm(n_bursts), seed=5)
+
+    clean = _serve(cfg, params, trace, horizon=horizon)
+    rec = _serve(cfg, params, trace, faults=mk_storm(), horizon=horizon)
+    rec2 = _serve(cfg, params, trace, faults=mk_storm(), horizon=horizon)
+    naive = _serve(cfg, params, trace, faults=mk_storm(), recovery=False,
+                   horizon=horizon)
+
+    deterministic = (rec["_fault_log"] == rec2["_fault_log"]
+                     and rec["_ls_outputs"] == rec2["_ls_outputs"])
+    for m in (clean, rec, rec2, naive):
+        m.pop("_ls_outputs")
+        m.pop("_fault_log")
+
+    slo_on, slo_off = rec["ls_slo"], naive["ls_slo"]
+    collapses = slo_off <= max(slo_on - 0.15, 0.0) or slo_off < 0.8
+    passed = bool(slo_on >= 0.95 and collapses and deterministic)
+
+    for name, m in (("clean", clean), ("storm_recovery", rec),
+                    ("storm_naive", naive)):
+        rows.add(f"chaos/{name}", 0.0,
+                 f"slo={m['ls_slo']:.3f};be_tok={m['be_goodput_tokens']};"
+                 f"wd={m['watchdog_trips']}")
+    rows.add("chaos/summary", 0.0,
+             f"pass={passed};deterministic={deterministic}")
+
+    out = {
+        "smoke": smoke,
+        "workload": {"n_bursts": n_bursts, "ls_per_burst": ls_per_burst,
+                     "be_per_period": be_per_period, "slo_ticks": SLO_TICKS,
+                     "kv_pages": KV_PAGES},
+        "modes": {"clean": clean, "storm_recovery": rec,
+                  "storm_recovery_replay": rec2, "storm_naive": naive},
+        "summary": {
+            "ls_slo_recovery_on": slo_on,
+            "ls_slo_recovery_off": slo_off,
+            "recovery_off_collapses": bool(collapses),
+            "deterministic_replay": bool(deterministic),
+            "pass": passed,
+        },
+    }
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    smoke = "--smoke" in sys.argv
+    path = "BENCH_chaos.json"
+    if "--out" in sys.argv:
+        path = sys.argv[sys.argv.index("--out") + 1]
+    run(smoke=smoke, out_path=path).emit()

@@ -36,11 +36,16 @@ class PCIeCFS:
         self.cfs_period = cfs_period
 
     def run(self, requests: List[CopyRequest], bus: BusSpec,
-            direction: str | None = None) -> List[Completion]:
+            direction: str | None = None, faults=None) -> List[Completion]:
+        """``faults`` (serving.faults.FaultPlane): inside a ``link_stall``
+        window no fetch quantum starts — the scheduler idles to the window
+        edge and resumes. Transfers are delayed, never dropped, and the
+        vruntime fairness accounting is untouched by the stall."""
         if direction is None:
             out = []
             for d in ("h2d", "d2h"):
-                out += self.run([r for r in requests if r.direction == d], bus, d)
+                out += self.run([r for r in requests if r.direction == d],
+                                bus, d, faults=faults)
             return out
         reqs = sorted(requests, key=lambda r: r.t_submit)
         bw = bw_of(bus, direction)
@@ -74,6 +79,12 @@ class PCIeCFS:
                 t = max(t, reqs[i].t_submit)
                 admit(t)
                 continue
+            if faults is not None:
+                stall_end = faults.stall_until(t)
+                if stall_end > t:        # link down: idle to the window edge
+                    t = stall_end
+                    admit(t)
+                    continue
             # ---- Algo 5: FetchTasks ----
             sum_nice = sum(q.nice for q in active)
             sel = min(active, key=lambda q: q.vruntime)

@@ -122,7 +122,7 @@ class GPUSimulator:
                  coloring: bool = False, ch_be: float = 1 / 3,
                  spt_overhead: float = 0.007, pcie_coupled=None,
                  controller=None, control_dt: float = 0.02,
-                 migration_bytes: float = 0.0):
+                 migration_bytes: float = 0.0, faults=None):
         self.dev = dev
         self.policy = policy
         self.coloring = coloring
@@ -130,6 +130,11 @@ class GPUSimulator:
         self.spt_overhead = spt_overhead
         self.controller = controller
         self.control_dt = control_dt
+        # chaos plane (serving.faults.FaultPlane): transient bandwidth
+        # degradation / thermal throttle / per-tenant straggler windows are
+        # charged through _rates, and event steps are capped at fault
+        # boundaries so no rate segment spans a fault transition
+        self.faults = faults
         # resplit-aware migration costing: bytes of KV pages that must move
         # per unit of |Δch_be| at a plan transition (0 = the historical
         # free-bookkeeping model). The move occupies the memory system for
@@ -152,8 +157,16 @@ class GPUSimulator:
         dur = max(k.flops / self.dev.peak_flops, k.bytes / self.dev.hbm_bw)
         return dur < 4e-3 / n_ls_active
 
-    def _rates(self, running: List[Tenant]):
-        """Per-tenant kernel duration at the current co-execution state."""
+    def _rates(self, running: List[Tenant], now: float = 0.0):
+        """Per-tenant kernel duration at the current co-execution state.
+        Injected faults scale the device here: ``bw_degrade`` multiplies
+        HBM bandwidth, ``thermal_throttle`` multiplies peak FLOPs, and a
+        ``straggler`` window stretches the target tenant's kernels —
+        faults slow work down, they never lose it."""
+        peak_flops, hbm_bw = self.dev.peak_flops, self.dev.hbm_bw
+        if self.faults is not None:
+            hbm_bw *= self.faults.bw_scale(now)
+            peak_flops *= self.faults.flops_scale(now)
         ls = [t for t in running if t.is_ls]
         be = [t for t in running if not t.is_ls]
         ls_f, be_f = self.policy.alloc(bool(ls), bool(be))
@@ -178,18 +191,20 @@ class GPUSimulator:
             sm = max(sm, 1e-6)
             if self.coloring:
                 share = (1 - self.ch_be) if t.is_ls else self.ch_be
-                bw = self.dev.hbm_bw * share / max(
+                bw = hbm_bw * share / max(
                     len(ls) if t.is_ls else len(be), 1)
                 thrash = 1.0
                 spt = 1.0 + (self.spt_overhead if k.memory_bound else 0.0)
             else:
-                bw = self.dev.hbm_bw * demands[t.name] / tot_dem
+                bw = hbm_bw * demands[t.name] / tot_dem
                 cross = (ls and be)
                 thrash = (self.dev.thrash
                           if (cross and k.memory_bound) else 1.0)
                 spt = 1.0
-            dur = max(k.flops / (self.dev.peak_flops * sm),
+            dur = max(k.flops / (peak_flops * sm),
                       k.bytes / max(bw, 1.0)) * thrash * spt
+            if self.faults is not None:
+                dur *= self.faults.straggler_slowdown(now, t.name)
             out[t.name] = max(dur, 1e-9)
         return out
 
@@ -287,7 +302,7 @@ class GPUSimulator:
                     break
                 t = min(nxt)
                 continue
-            durs = self._rates(running)
+            durs = self._rates(running, t)
             dt = min(tn.cur_remaining * durs[tn.name] for tn in running)
             arr = [tn.queue[0] - t for tn in tenants
                    if tn.queue and tn.active_since is None] + \
@@ -299,6 +314,12 @@ class GPUSimulator:
                 # never integrate across a control boundary: the plan (and
                 # with it every co-execution rate) may change there
                 dt = min(dt, max(next_ctrl - t, 1e-9))
+            if self.faults is not None:
+                # likewise never integrate across a fault boundary: the
+                # degraded rates apply exactly within their windows
+                b = self.faults.next_boundary(t)
+                if b < float("inf"):
+                    dt = min(dt, max(b - t, 1e-9))
             dt = min(dt, horizon - t + 1e-9)
             for tn in running:
                 tn.cur_remaining -= dt / durs[tn.name]

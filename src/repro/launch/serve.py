@@ -33,6 +33,11 @@ def main():
                     help="paged KV cache with page-table admission")
     ap.add_argument("--page-size", type=int, default=8,
                     help="tokens per KV page (with --paged)")
+    ap.add_argument("--kv-pages", type=int, default=None,
+                    help="per-tenant KV page-pool override (with --paged); "
+                         "a tight pool forces growth preemption / swapping, "
+                         "which is what exercises the host-tier fault seams "
+                         "under --chaos")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="radix-tree copy-on-write KV page sharing: cached "
                          "prompt prefixes map into new slots' page tables "
@@ -79,6 +84,21 @@ def main():
                     help="quanta between control ticks (jax backend)")
     ap.add_argument("--gpu", default="tesla-p40",
                     help="hash-model / device model for coloring and sim")
+    ap.add_argument("--chaos", action="store_true",
+                    help="attach a seeded FaultPlane storm (serving.faults): "
+                         "host-tier write/read faults, cold-page corruption, "
+                         "allocator faults and controller missed ticks over "
+                         "the run, with the engine's recovery paths on")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="storm seed for --chaos (same seed, same schedule)")
+    ap.add_argument("--no-fault-recovery", action="store_true",
+                    help="naive ablation for --chaos: blind retries, no "
+                         "watchdog, no shedding, unverified cold pages")
+    ap.add_argument("--fault-budget", type=int, default=8,
+                    help="recoveries per degradation-ladder rung per tenant")
+    ap.add_argument("--max-queue", type=int, default=4096,
+                    help="per-tenant submit backpressure bound (excess "
+                         "requests are rejected, not queued)")
     args = ap.parse_args()
 
     from ..configs import get_config, smoke_config
@@ -87,7 +107,24 @@ def main():
                                    grid_search)
     from ..core.simulator import GPU_DEVICES
     from ..core.tenancy import TenantSpec
-    from ..serving import ServingEngine
+    from ..serving import FaultPlane, ServingEngine
+
+    faults = None
+    now_fn = None
+    if args.chaos:
+        # FaultPlane schedules events on a zero-based clock; anchor the
+        # engine clock at launch so the storm window actually overlaps
+        # the run (time.perf_counter's origin is arbitrary).
+        import time
+        t0 = time.perf_counter()
+        now_fn = lambda: time.perf_counter() - t0
+        horizon = max(args.requests * 2.0, 10.0)
+        faults = FaultPlane.storm(
+            horizon=horizon, seed=args.fault_seed,
+            rates={"swap_write_fail": 0.1, "swap_read_fail": 0.1,
+                   "page_corrupt": 0.1, "alloc_fail": 0.05,
+                   "ctl_missed_tick": 0.05, "bw_degrade": 0.05},
+            duration=horizon / 10)
 
     plan, ctrl = None, None
     if args.online:
@@ -119,13 +156,16 @@ def main():
         max_seq=args.prompt_len + args.max_new + 4,
         backend=args.backend, plan=plan, coloring=args.coloring,
         paged=args.paged or args.prefix_cache or grow,
-        page_size=args.page_size,
+        page_size=args.page_size, kv_pages=args.kv_pages,
         grow_pages=grow, swap=args.swap, cold_dtype=args.cold_dtype,
         prefix_cache=args.prefix_cache, use_flash=args.use_flash,
         chunk_size=args.chunk_size, token_budget=args.token_budget,
         slots_ls=args.slots, slots_be=args.slots, device=args.gpu
         if args.gpu in GPU_DEVICES else "tpu-v5e",
         controller=ctrl, control_interval=args.control_interval,
+        faults=faults, fault_recovery=not args.no_fault_recovery,
+        fault_budget=args.fault_budget, max_queue=args.max_queue,
+        now_fn=now_fn,
         hash_model=gpu_hash_model(args.gpu)
         if args.coloring and args.backend == "jax" else None)
     rng = np.random.default_rng(0)

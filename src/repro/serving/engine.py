@@ -101,6 +101,7 @@ from ..core.simulator import (GPU_DEVICES, GPUSimulator, Kernel, Tenant,
                               request_kernels)
 from ..core.tenancy import TenantSpec
 from ..models import transformer as tf
+from .faults import ColdPageCorrupt, FaultPlane, HostTierFault, safe_floor
 from .kv_cache import PagedKVCache, kv_bytes_per_token
 from .prefix_cache import PrefixCache
 from .scheduler import Phase, QuantumReport, TokenBudgetScheduler
@@ -136,6 +137,17 @@ class Request:
     resume_tok: int = 0                # rt.last_tok at swap-out
     t_evicted: Optional[float] = None  # set at preempt/swap-out, cleared at
     preempts: int = 0                  # the resume token (warm-restart gap)
+    # chaos-plane state: deadline is absolute (clock units) — an expired BE
+    # request is load-shed instead of served late; rejected marks submit
+    # backpressure (bounded queue / oversized prompt); shed marks a request
+    # dropped by a recovery path (deadline, grow-deadlock). swap_retries /
+    # swap_backoff drive the bounded retry-with-backoff of swap-in faults
+    # (backoff = engine step index before which no retry is attempted).
+    deadline: Optional[float] = None
+    rejected: bool = False
+    shed: bool = False
+    swap_retries: int = 0
+    swap_backoff: int = 0
 
     @property
     def latency(self):
@@ -176,6 +188,20 @@ class _TenantRT:
     swap_ins: int = 0                       # page groups faulted back
     grow_stalls: int = 0                    # decode quanta stalled on growth
     resume_gaps: List[float] = field(default_factory=list)  # evict->token
+    # chaos-plane state (serving.faults): counters for the recovery paths
+    # plus the per-tenant degradation ladder — every recovery costs one
+    # point of fault_score; each fault_budget points takes the next rung
+    rejected: int = 0                       # submit backpressure rejections
+    shed: int = 0                           # requests load-shed by recovery
+    grow_deadlocks: int = 0                 # growth exhausted all victims
+    deadlock_streak: int = 0                # consecutive victimless stalls
+    swap_retries: int = 0                   # swap-in fault retries
+    fault_recoveries: Dict[str, int] = field(default_factory=dict)
+    fault_score: int = 0
+    degraded: List[str] = field(default_factory=list)  # ladder rungs taken
+    flash: bool = False                     # current attention path
+    swap_degraded: bool = False             # rung: swap-out -> preempt
+    grow_degraded: bool = False             # rung: growth -> full extent
     # sim-backend knobs / results
     closed_loop: bool = False
     sim_seq: Optional[int] = None
@@ -217,30 +243,35 @@ class _JaxBackend:
     def __init__(self, engine: "ServingEngine"):
         self.engine = engine
 
-    def add_tenant(self, rt: _TenantRT):
+    def _build_fns(self, rt: _TenantRT):
+        """(Re)build the tenant's jitted forwards. The attention path is
+        captured from ``rt.flash`` *by value*, so the degradation ladder's
+        flash->dense rung can rebuild one live tenant mid-run without
+        touching any other tenant or the engine-wide default."""
         eng = self.engine
         cfg = rt.cfg
+        flash = rt.flash
 
         def _prefill(p, tokens, cap):
             return tf.prefill(p, cfg, {"tokens": tokens}, cap)
 
         def _decode(p, tok, cache, pos):
             return tf.decode_step(p, cfg, tok, cache, pos,
-                                  use_flash=eng.use_flash)
+                                  use_flash=flash)
 
         def _decode_paged(p, tok, cache, pos, pt):
             return tf.decode_step(p, cfg, tok, cache, pos,
                                   ctx_extra={"page_table": pt},
-                                  use_flash=eng.use_flash)
+                                  use_flash=flash)
 
         def _chunk(p, toks, cache, pos):
             return tf.prefill_step(p, cfg, toks, cache, pos,
-                                   use_flash=eng.use_flash)
+                                   use_flash=flash)
 
         def _chunk_paged(p, toks, cache, pos, pt):
             return tf.prefill_step(p, cfg, toks, cache, pos,
                                    ctx_extra={"page_table": pt},
-                                   use_flash=eng.use_flash)
+                                   use_flash=flash)
 
         # monolithic prompt processing survives only as the fallback for
         # models the cached-context chunk path can't serve (SSM state,
@@ -251,6 +282,13 @@ class _JaxBackend:
                                   donate_argnums=(2,))
         # the previous cache is dead after each decode step — donate it so
         # the one-token append is in-place instead of a full pool copy
+        rt.decode_fn = jax.jit(_decode_paged if eng.paged else _decode,
+                               donate_argnums=(2,))
+
+    def add_tenant(self, rt: _TenantRT):
+        eng = self.engine
+        rt.flash = eng.use_flash
+        self._build_fns(rt)
         if eng.paged:
             chans = cap = None
             if eng.arena is not None:
@@ -260,20 +298,29 @@ class _JaxBackend:
                     # maximum (every channel); live admission still runs
                     # against the class's current colored bytes
                     cap = tuple(range(eng.arena.num_channels))
-            rt.kv = PagedKVCache(cfg, rt.n_slots, eng.max_seq, eng.page_size,
+            rt.kv = PagedKVCache(rt.cfg, rt.n_slots, eng.max_seq,
+                                 eng.page_size,
                                  n_pages=eng.kv_pages, arena=eng.arena,
                                  channels=chans, name=rt.spec.name,
                                  cap_channels=cap,
                                  sharing=eng.prefix_cache)
+            if eng.faults is not None:
+                # chaos plane: allocation faults defer admission/growth at
+                # the call sites, never inside can_admit_pages (kv_cache)
+                rt.kv.fault_hook = (
+                    lambda _rt=rt: eng.faults.active(
+                        "alloc_fail", eng.clock(),
+                        target=_rt.spec.name) is not None)
             if eng.prefix_cache:
                 rt.prefix = PrefixCache(eng.page_size, rt.kv)
             rt.cache = rt.kv.init_pools()
-            rt.decode_fn = jax.jit(_decode_paged, donate_argnums=(2,))
             if eng.swap:
                 rt.host = HostSwapPool(eng.cold_dtype,
                                        tenant=rt.spec.name,
                                        priority=rt.spec.priority,
-                                       nice=rt.spec.nice)
+                                       nice=rt.spec.nice,
+                                       faults=eng.faults,
+                                       verify=eng.fault_recovery)
                 if rt.prefix is not None:
                     # cold prefix tier: evicted leaves' pages survive on the
                     # host and fault back in before a matching admission
@@ -289,8 +336,7 @@ class _JaxBackend:
                     rt.prefix.cold_loader = _load
                     rt.prefix.cold_has = lambda key, _rt=rt: key in _rt.host
         else:
-            rt.cache = tf.init_cache(cfg, rt.n_slots, eng.max_seq)
-            rt.decode_fn = jax.jit(_decode, donate_argnums=(2,))
+            rt.cache = tf.init_cache(rt.cfg, rt.n_slots, eng.max_seq)
         rt.pos = np.zeros(rt.n_slots, np.int32)
         rt.last_tok = np.zeros(rt.n_slots, np.int32)
         rt.active = [None] * rt.n_slots
@@ -327,18 +373,77 @@ class _JaxBackend:
         elif rt.kv is not None:
             rt.kv.free_slot(slot)
 
-    def _youngest_victim(self, rt: _TenantRT, exclude: int
+    # -- chaos plane: recovery bookkeeping / degradation ladder ---------
+    def _record_recovery(self, rt: _TenantRT, kind: str):
+        """Charge a recovery action against the tenant's fault budget.
+        Every ``fault_budget`` points the degradation ladder takes its next
+        rung (serving.faults module docstring): flash->dense decode,
+        swap-out->preempt-restart, page-growth->full-extent admission —
+        each trades peak efficiency for fewer moving parts under a storm."""
+        rt.fault_recoveries[kind] = rt.fault_recoveries.get(kind, 0) + 1
+        rt.fault_score += 1
+        eng = self.engine
+        while rt.fault_score >= eng.fault_budget * (len(rt.degraded) + 1):
+            if rt.flash:
+                rt.flash = False
+                self._build_fns(rt)
+                rt.degraded.append("flash_to_dense")
+            elif eng.swap and not rt.swap_degraded:
+                rt.swap_degraded = True
+                rt.degraded.append("swap_to_preempt")
+            elif eng.grow_pages and not rt.grow_degraded:
+                rt.grow_degraded = True
+                rt.degraded.append("grow_to_full")
+            else:
+                break
+
+    def _shed(self, rt: _TenantRT, req: Request, reason: str):
+        """Load-shed a request (deadline expiry, grow deadlock): device
+        pages freed without donation, host-tier pages dropped, and the
+        request finishes failed+shed — recovery trades one BE request for
+        the batch's forward progress instead of stalling everyone."""
+        if req.slot is not None:
+            s = req.slot
+            self._drop_slot_pages(rt, s)
+            rt.active[s] = None
+            rt.pos[s] = 0
+            rt.last_tok[s] = 0
+            req.slot = None
+        elif req in rt.queue:
+            rt.queue.remove(req)
+        if req.swap_keys and rt.host is not None:
+            for k in req.swap_keys:
+                rt.host.drop(k)
+        req.swap_keys = None
+        req.failed = True
+        req.shed = True
+        req.phase = Phase.FINISHED
+        req.t_done = self.engine.clock()
+        if req.output is None:
+            req.output = []
+        rt.shed += 1
+        rt.done.append(req)
+
+    def _youngest_victim(self, rt: _TenantRT, exclude: int,
+                         younger_than: Optional[Request] = None
                          ) -> Optional[Request]:
         """Preemption victim under pool exhaustion: the youngest (latest
         submit) other active request in this tenant's pool — least sunk
         work, and it re-queues behind everything it raced. The growing slot
-        itself is excluded (self-preemption would livelock)."""
+        itself is excluded (self-preemption would livelock), and with
+        ``younger_than`` only requests strictly younger than the grower
+        qualify: under preempt-restart (swap off or degraded) two peers
+        stealing each other's pages would otherwise reset each other's
+        output forever — seniority makes the eldest's progress monotone,
+        which is what guarantees the pool eventually drains."""
+        age = (lambda r: (r.t_submit, r.rid))
         cands = [r for s, r in enumerate(rt.active)
                  if r is not None and s != exclude
-                 and r.phase in (Phase.PREFILLING, Phase.DECODING)]
+                 and r.phase in (Phase.PREFILLING, Phase.DECODING)
+                 and (younger_than is None or age(r) > age(younger_than))]
         if not cands:
             return None
-        return max(cands, key=lambda r: (r.t_submit, r.rid))
+        return max(cands, key=age)
 
     def _preempt(self, rt: _TenantRT, req: Request):
         """Restart a victim from scratch (swap off, or a mid-prefill victim
@@ -372,15 +477,27 @@ class _JaxBackend:
         n = kv.mapped_count(s)
         now = eng.clock()
         keys = []
-        for j in range(n):
-            key = ("req", req.rid, j)
-            rt.host.drop(key)
-            rt.host.put(rt.cache, key, int(kv.page_table[s, j]), t=now)
-            keys.append(key)
+        try:
+            for j in range(n):
+                key = ("req", req.rid, j)
+                rt.host.drop(key)
+                rt.host.put(rt.cache, key, int(kv.page_table[s, j]), t=now)
+                keys.append(key)
+        except HostTierFault:
+            # mid-group write fault: the host must never hold a partial
+            # page group — drop what landed, let the caller pick a fallback
+            for k in keys:
+                rt.host.drop(k)
+            raise
         req.swap_keys = keys
         req.swap_cursor = 0
         req.resume_pos = int(rt.pos[s])
         req.resume_tok = int(rt.last_tok[s])
+        if req.t_evicted is not None:
+            # re-evicted before decoding a token after its last swap-in:
+            # close the pending warm-restart gap here so every completed
+            # swap-in records exactly one resume gap
+            rt.resume_gaps.append(now - req.t_evicted)
         req.t_evicted = now
         req.phase = Phase.SWAPPED
         req.slot = None
@@ -398,11 +515,30 @@ class _JaxBackend:
         prompt's pages). On pool exhaustion: free cold prefix leaves first,
         then swap out — or, with swap off / for a mid-prefill victim,
         preempt — the youngest other active request; a slot that still
-        can't grow stalls out of this quantum's decode batch. Returns
-        (ready slots, pages swapped out)."""
+        can't grow stalls out of this quantum's decode batch. Under the
+        chaos plane: an ``alloc_fail`` window defers every growth (no
+        eviction), a swap write fault downgrades that victim to a preempt,
+        and a *persistent* no-victim deadlock (``deadlock_patience``
+        quanta) sheds the youngest BE request rather than spinning.
+        Victims must be strictly younger than their grower, so the eldest
+        request's progress is monotone — the liveness argument for the
+        preempt-restart path. Returns (ready slots, pages swapped out)."""
         eng = self.engine
         kv = rt.kv
         ready, out_pages = [], 0
+        if kv.alloc_fault():
+            # allocator fault window: defer every growth this quantum —
+            # nothing is evicted, the growers stall, and slots that already
+            # own their next page decode normally
+            for s in slots:
+                req = rt.active[s]
+                if req is None or req.phase is not Phase.DECODING:
+                    continue
+                if kv.needs_grow(s, int(rt.pos[s])):
+                    rt.grow_stalls += 1
+                else:
+                    ready.append(s)
+            return ready, 0
         for s in slots:
             req = rt.active[s]
             if req is None or req.phase is not Phase.DECODING:
@@ -415,19 +551,57 @@ class _JaxBackend:
                 if kv.can_admit_pages(1):
                     kv.grow_slot(s)
                     grown = True
+                    rt.deadlock_streak = 0
                     break
                 if rt.prefix is not None and rt.prefix.evict_until(1):
                     continue
-                victim = self._youngest_victim(rt, exclude=s)
+                victim = self._youngest_victim(rt, exclude=s,
+                                               younger_than=req)
                 if victim is None:
+                    if self._youngest_victim(rt, exclude=s) is not None:
+                        # only elders are killable: stall — seniority says
+                        # the eldest grower wins, and its monotone progress
+                        # is what drains the pool for this slot later
+                        break
+                    # every other slot is SWAPPING/unkillable. The old code
+                    # spun here forever re-picking nothing (grow livelock) —
+                    # but one victimless quantum is usually just a swap-in
+                    # mid-flight, so only a *persistent* streak
+                    # (deadlock_patience quanta) counts as a deadlock; then
+                    # BE under recovery sheds the youngest active request
+                    # of any phase — including the grower itself — so the
+                    # pool drains. LS stalls and surfaces via the counter
+                    # instead of losing work.
+                    rt.deadlock_streak += 1
+                    if rt.deadlock_streak >= eng.deadlock_patience:
+                        rt.deadlock_streak = 0
+                        rt.grow_deadlocks += 1
+                        if not rt.spec.is_ls and eng.fault_recovery:
+                            cands = [r for r in rt.active if r is not None]
+                            if cands:
+                                shed = max(cands,
+                                           key=lambda r: (r.t_submit, r.rid))
+                                self._shed(rt, shed, "grow_deadlock")
+                                if shed is not req:
+                                    continue
                     break
-                if rt.host is not None and victim.phase is Phase.DECODING:
-                    out_pages += self._swap_out(rt, victim)
+                if (rt.host is not None and not rt.swap_degraded
+                        and victim.phase is Phase.DECODING):
+                    try:
+                        out_pages += self._swap_out(rt, victim)
+                    except HostTierFault:
+                        # host write window: fall back one rung for this
+                        # victim — preempt-restart instead of stalling
+                        if eng.fault_recovery:
+                            self._record_recovery(rt, "swap_write")
+                            self._preempt(rt, victim)
+                        else:
+                            break
                 else:
                     self._preempt(rt, victim)
             if grown:
                 ready.append(s)
-            else:
+            elif rt.active[s] is not None:
                 rt.grow_stalls += 1
         return ([s for s in ready if rt.active[s] is not None
                  and rt.active[s].phase is Phase.DECODING], out_pages)
@@ -445,19 +619,51 @@ class _JaxBackend:
             if budget <= 0:
                 break
             req = rt.active[s]
+            if req.swap_backoff > eng._step_idx:
+                continue          # backing off a faulted swap-in
+            faulted = False
             while budget > 0 and req.swap_cursor < len(req.swap_keys):
                 dst = int(rt.kv.page_table[s, req.swap_cursor])
-                rt.cache, _ = rt.host.get(
-                    rt.cache, req.swap_keys[req.swap_cursor], dst,
-                    t=eng.clock())
+                try:
+                    rt.cache, _ = rt.host.get(
+                        rt.cache, req.swap_keys[req.swap_cursor], dst,
+                        t=eng.clock())
+                except HostTierFault as e:
+                    faulted = True
+                    if not eng.fault_recovery:
+                        break     # naive baseline: blind retry next quantum
+                    req.swap_retries += 1
+                    rt.swap_retries += 1
+                    if (isinstance(e, ColdPageCorrupt)
+                            or req.swap_retries > eng.swap_retry_limit):
+                        # unrecoverable (corrupt page / retries exhausted):
+                        # abandon the host copy and preempt-restart — the
+                        # deterministic replay re-emits identical tokens
+                        for k in req.swap_keys:
+                            rt.host.drop(k)
+                        self._record_recovery(rt, "swap_read")
+                        self._preempt(rt, req)
+                        req.swap_retries = 0
+                        req.swap_backoff = 0
+                    else:
+                        # bounded retry with exponential backoff, in engine
+                        # steps — the transient window clears while other
+                        # slots keep their swap-in budget
+                        req.swap_backoff = eng._step_idx + (
+                            1 << min(req.swap_retries, 4))
+                    break
                 req.swap_cursor += 1
                 budget -= 1
                 pages += 1
+            if faulted:
+                continue
             if req.swap_cursor >= len(req.swap_keys):
                 rt.pos[s] = req.resume_pos
                 rt.last_tok[s] = req.resume_tok
                 req.phase = Phase.DECODING
                 req.swap_keys = None
+                req.swap_retries = 0
+                req.swap_backoff = 0
                 rt.swap_ins += 1
         return pages
 
@@ -625,6 +831,17 @@ class _JaxBackend:
         ticking."""
         eng = self.engine
         sched = eng.scheduler
+        shed_now = 0
+        if eng.fault_recovery:
+            # deadline shed pre-pass: an expired queued (WAITING/SWAPPED)
+            # request is dropped before it can consume admission or pages —
+            # under a fault storm BE deadlines turn backlog into shed work
+            # instead of batch-wide stall
+            now = eng.clock()
+            for req in [r for r in rt.queue
+                        if r.deadline is not None and now > r.deadline]:
+                self._shed(rt, req, "deadline")
+                shed_now += 1
         report = QuantumReport(rt.spec.name, rt.spec.priority,
                                budget=sched.budget_for(rt.spec.priority))
         dec = sched.decode_slots(rt)
@@ -643,17 +860,27 @@ class _JaxBackend:
         elif admitted:
             report.prefill_tokens = self._prefill_monolithic(rt, admitted)
         progressed = bool(dec or admitted or report.prefill_tokens
-                          or report.swap_in_pages or report.swap_out_pages)
+                          or report.swap_in_pages or report.swap_out_pages
+                          or shed_now)
         if progressed:
             eng.quantum_log.append(report)
         return progressed
 
     def run_until_idle(self, max_steps: int = 100_000, horizon=None) -> int:
-        n = 0
-        while self.engine.step():
-            n += 1
-            if n >= max_steps:
+        eng = self.engine
+        n = stall = 0
+        while n < max_steps:
+            if eng.step():
+                n += 1
+                stall = 0
+                continue
+            # under a fault plane a quantum may legitimately defer (alloc
+            # window, swap backoff) — idle means no tenant has work, not
+            # one workless step; the stall cap bounds a wedged storm
+            if eng.faults is None or stall >= 10_000 \
+                    or not any(rt.has_work() for rt in eng.tenants.values()):
                 break
+            stall += 1
         return n
 
 
@@ -755,7 +982,8 @@ class _SimBackend:
         sim = GPUSimulator(self.dev, policy, coloring=eng.coloring,
                            ch_be=eng.ch_be, controller=eng.controller,
                            control_dt=eng.control_dt,
-                           migration_bytes=eng.migration_bytes)
+                           migration_bytes=eng.migration_bytes,
+                           faults=eng.faults)
         res = sim.run([tn for _, _, tn in built], horizon)
         eng.migrated_bytes += sim.migrated_bytes
         total = 0
@@ -826,6 +1054,26 @@ class ServingEngine:
       seed         tie-break seed for deterministic tenant ordering.
       device       DeviceSpec or name for the sim backend.
       policy       ComputePolicy kind for the sim backend.
+      faults       serving.faults.FaultPlane: seeded, deterministic fault
+                   injection at the GPU / PCIe / host-tier / controller
+                   seams (both backends; see the faults module docstring).
+      fault_recovery  master switch for the graceful-degradation paths —
+                   deadline shedding, swap retry+backoff, controller
+                   watchdog, cold-page checksum verify, degradation
+                   ladder. False is the naive ablation chaos_bench
+                   measures against.
+      fault_budget recoveries per degradation-ladder rung (per tenant).
+      max_queue    per-tenant submit backpressure bound (excess rejects).
+      swap_retry_limit  swap-in retries before preempt-restart.
+      deadlock_patience  consecutive victimless growth stalls before a
+                   grow_deadlock is declared (and, for BE under recovery,
+                   the youngest active request shed) — one stall is
+                   usually just a swap-in mid-flight.
+      watchdog_quanta   LS-starvation window before the safe-plan snap
+                   (default: 4 control intervals when faults+controller
+                   are both present, else disabled).
+      safe_plan    explicit watchdog target (default: the frontier's most
+                   conservative entry, else faults.safe_floor(plan)).
     """
 
     def __init__(self, max_seq: int = 128, *, backend: str = "jax",
@@ -842,7 +1090,13 @@ class ServingEngine:
                  prefix_min_hit: float = 0.0,
                  migration_bytes: float = 0.0, seed: int = 0,
                  grow_pages: bool = False, swap: bool = False,
-                 cold_dtype: str = "int8", swap_quantum_pages: int = 4):
+                 cold_dtype: str = "int8", swap_quantum_pages: int = 4,
+                 faults: Optional[FaultPlane] = None,
+                 fault_recovery: bool = True, fault_budget: int = 8,
+                 max_queue: int = 4096, swap_retry_limit: int = 3,
+                 deadlock_patience: int = 8,
+                 watchdog_quanta: Optional[int] = None,
+                 safe_plan: Optional[ResourcePlan] = None):
         self.max_seq = max_seq
         self.paged = paged
         self.page_size = page_size
@@ -903,6 +1157,30 @@ class ServingEngine:
         self.controller = controller
         self.control_interval = max(int(control_interval), 1)
         self.control_dt = control_dt
+        # chaos plane (serving.faults): an attached FaultPlane injects at
+        # the seams above; fault_recovery gates every graceful-degradation
+        # path at once (off = the naive ablation: blind retries, no
+        # watchdog, no shedding, unverified cold pages). fault_budget is
+        # recoveries-per-rung of the degradation ladder; watchdog_quanta
+        # defaults to 4 control intervals when a controller rides next to
+        # a fault plane and stays off otherwise.
+        self.faults = faults
+        self.fault_recovery = fault_recovery
+        self.fault_budget = max(int(fault_budget), 1)
+        self.max_queue = max(int(max_queue), 1)
+        self.swap_retry_limit = max(int(swap_retry_limit), 0)
+        self.deadlock_patience = max(int(deadlock_patience), 1)
+        if (watchdog_quanta is None and faults is not None
+                and controller is not None and fault_recovery):
+            watchdog_quanta = 4 * self.control_interval
+        self.watchdog_quanta = watchdog_quanta
+        self.safe_plan = safe_plan
+        self.watchdog_trips = 0
+        self.missed_ticks = 0
+        self.stale_signals = 0
+        self._stale_sig = None
+        self._last_ls_step: Optional[int] = None
+        self._ls_work_since: Optional[int] = None
         self.transitions: List[dict] = []
         self._applied_plan = None
         self._last_ctl_step: Optional[int] = None
@@ -974,13 +1252,29 @@ class ServingEngine:
         self.tenants[spec.name] = rt
         return rt
 
-    def submit(self, tenant: str, tokens, max_new: int = 8, at=None):
+    def submit(self, tenant: str, tokens, max_new: int = 8, at=None,
+               deadline: Optional[float] = None):
         """Queue a request. ``at`` overrides the submit timestamp (virtual
         arrival time for the sim backend's scenario traces). Sim-backend
         submissions without ``at`` default to engine-epoch-relative time, so
         the simulated horizon starts near t=0 rather than at the process
-        uptime perf_counter() reports."""
+        uptime perf_counter() reports.
+
+        ``deadline`` is in clock units after submit: an expired request
+        still WAITING/SWAPPED is load-shed instead of served late (chaos
+        recovery; no-op when ``fault_recovery`` is off). Malformed input
+        raises (unknown tenant: KeyError; empty / non-1-D prompt:
+        ValueError); an oversized prompt (real-execution backend only —
+        the sim backend cost-models arbitrary shapes) or a full per-tenant
+        queue (``max_queue``) is *rejected* — the request finishes immediately
+        with ``failed=rejected=True`` and counts in ``rt.rejected`` —
+        backpressure instead of a poisoned batch."""
+        if tenant not in self.tenants:
+            raise KeyError(f"unknown tenant {tenant!r}")
         rt = self.tenants[tenant]
+        toks = np.asarray(tokens, np.int32)
+        if toks.ndim != 1 or toks.size == 0:
+            raise ValueError("prompt must be a non-empty 1-D token array")
         self._rid += 1
         if at is not None:
             t = float(at)
@@ -988,8 +1282,21 @@ class ServingEngine:
             t = self.clock() - self._t0
         else:
             t = self.clock()
-        req = Request(self._rid, tenant, np.asarray(tokens, np.int32),
-                      max_new, t)
+        req = Request(self._rid, tenant, toks, max_new, t,
+                      deadline=(t + float(deadline)
+                                if deadline is not None else None))
+        # the sim backend cost-models arbitrary prompt shapes (paper-scale
+        # scenarios) without allocating cache rows, so the max_seq bound
+        # only protects the real-execution backend
+        oversize = toks.size > self.max_seq and self.backend_name != "sim"
+        if oversize or len(rt.queue) >= self.max_queue:
+            req.failed = req.rejected = True
+            req.phase = Phase.FINISHED
+            req.t_done = t
+            req.output = []
+            rt.rejected += 1
+            rt.done.append(req)
+            return req
         rt.queue.append(req)
         return req
 
@@ -1042,8 +1349,25 @@ class ServingEngine:
         if not due:
             return
         self._last_ctl_step = self._step_idx
-        plan = self.controller.decide(self._load_signal(),
-                                      t=float(self._step_idx))
+        now = self.clock()
+        if (self.faults is not None
+                and self.faults.active("ctl_missed_tick", now) is not None):
+            # control-plane fault: the tick is dropped on the floor — the
+            # previous plan stays in force and the step() watchdog is the
+            # backstop that re-asserts the LS guarantee
+            self.missed_ticks += 1
+            return
+        sig = self._load_signal()
+        if (self.faults is not None
+                and self.faults.active("ctl_stale_signal", now) is not None):
+            # stale telemetry: the controller decides on the last healthy
+            # window's signal instead of the current one
+            self.stale_signals += 1
+            if self._stale_sig is not None:
+                sig = self._stale_sig
+        else:
+            self._stale_sig = sig
+        plan = self.controller.decide(sig, t=float(self._step_idx))
         if plan is not self._applied_plan:
             self.apply_plan(plan)
         elif self.arena is not None:
@@ -1122,6 +1446,46 @@ class ServingEngine:
                                               if self.arena else 0)),
                                  "pinned_groups": len(pinned)})
 
+    def _safe_plan(self) -> Optional[ResourcePlan]:
+        """The conservative plan the watchdog snaps to: an explicit
+        ``safe_plan`` wins; else the controller frontier's most conservative
+        entry; else the current plan clamped to the hard floor
+        (``faults.safe_floor``)."""
+        if self.safe_plan is not None:
+            return self.safe_plan
+        fr = getattr(self.controller, "frontier", None)
+        if fr is not None and getattr(fr, "entries", None):
+            return fr.entries[-1][1]
+        base = self._applied_plan or self.plan
+        return safe_floor(base) if base is not None else None
+
+    def _watchdog(self, ls_work: bool):
+        """Controller watchdog (chaos recovery): if LS has had work for
+        ``watchdog_quanta`` consecutive steps without a single LS quantum
+        executing, while the live plan is more generous to BE than the safe
+        plan, snap to the safe plan immediately. This bounds the damage of
+        a wedged/stale controller to one watchdog window instead of letting
+        a full-lending plan starve LS for the rest of the run."""
+        if not ls_work:
+            self._ls_work_since = None
+            return
+        if self._ls_work_since is None:
+            self._ls_work_since = self._step_idx
+        anchor = self._ls_work_since
+        if self._last_ls_step is not None:
+            anchor = max(anchor, self._last_ls_step)
+        if self._step_idx - anchor < self.watchdog_quanta:
+            return
+        safe = self._safe_plan()
+        if safe is None or self.sm_be <= safe.sm_be + 1e-9:
+            # already at (or below) the safe share: nothing to snap; re-arm
+            self._last_ls_step = self._step_idx
+            return
+        self.apply_plan(safe)
+        self.transitions[-1]["watchdog"] = True
+        self.watchdog_trips += 1
+        self._last_ls_step = self._step_idx
+
     # ------------------------------------------------------------------
     def _pick(self, rts: List[_TenantRT]) -> List[_TenantRT]:
         """Earliest outstanding request first (FIFO across tenants), ties
@@ -1143,6 +1507,9 @@ class ServingEngine:
               if rt.spec.is_ls and rt.has_work()]
         be = [rt for rt in self.tenants.values()
               if not rt.spec.is_ls and rt.has_work()]
+        if (self.watchdog_quanta and self.fault_recovery
+                and self.backend_name == "jax"):
+            self._watchdog(bool(ls))
         if ls and be and self.sm_be > 0:
             # deficit counter: BE receives sm_be of contended quanta
             self._be_credit += self.sm_be
@@ -1163,10 +1530,17 @@ class ServingEngine:
         # to the next tenant of the class, then to the other class
         for rt in self._pick(pick) + self._pick(other):
             if self.backend.quantum(rt):
+                if rt.spec.is_ls:
+                    self._last_ls_step = self._step_idx
                 self.events.append((self._step_idx,
                                     rt.spec.name, rt.spec.priority))
                 self._step_idx += 1
                 return True
+        # a workless or fully-deferred step still advances the quantum
+        # index: swap retry backoffs and the watchdog window are measured
+        # in _step_idx, and freezing it during a stall would turn a
+        # transient fault window into a permanent wedge
+        self._step_idx += 1
         return False
 
     def _class_counts(self):
@@ -1269,6 +1643,17 @@ class ServingEngine:
                     "computed": rt.prefill_computed,
                     "saved": rt.prefill_tokens - rt.prefill_computed,
                 }
+            if (rt.rejected or rt.shed or rt.grow_deadlocks
+                    or rt.swap_retries or rt.fault_recoveries
+                    or rt.degraded):
+                out[name]["faults"] = {
+                    "rejected": rt.rejected,
+                    "shed": rt.shed,
+                    "grow_deadlocks": rt.grow_deadlocks,
+                    "swap_retries": rt.swap_retries,
+                    "recovered": dict(rt.fault_recoveries),
+                    "degraded": list(rt.degraded),
+                }
             c = cls[rt.spec.priority]
             c["done"] += lats
             c["ttft"] += ttfts
@@ -1314,4 +1699,29 @@ class ServingEngine:
                 name: {"violations": self.arena.isolation_violations(a),
                        "pages": a.n_pages}
                 for name, a in self.arena.allocations.items()}
+        # chaos-plane rollup: injected (observed) events vs. the recovery
+        # actions they triggered, plus the degradation state — present
+        # whenever a fault plane is attached or any recovery path fired
+        fa = {"injected": dict(self.faults.counts())
+              if self.faults is not None else {},
+              "recovered": {}, "shed": 0, "rejected": 0,
+              "grow_deadlocks": 0, "swap_retries": 0,
+              "watchdog_trips": self.watchdog_trips,
+              "missed_ticks": self.missed_ticks,
+              "stale_signals": self.stale_signals,
+              "degraded_tenants": {}}
+        for name, rt in self.tenants.items():
+            for k, v in rt.fault_recoveries.items():
+                fa["recovered"][k] = fa["recovered"].get(k, 0) + v
+            fa["shed"] += rt.shed
+            fa["rejected"] += rt.rejected
+            fa["grow_deadlocks"] += rt.grow_deadlocks
+            fa["swap_retries"] += rt.swap_retries
+            if rt.degraded:
+                fa["degraded_tenants"][name] = list(rt.degraded)
+        fa["degraded"] = bool(fa["degraded_tenants"])
+        if self.faults is not None or fa["recovered"] or fa["shed"] \
+                or fa["rejected"] or fa["grow_deadlocks"] \
+                or fa["swap_retries"] or fa["watchdog_trips"]:
+            out["faults"] = fa
         return out

@@ -138,6 +138,23 @@ class PagedKVCache:
         # own per-page arena groups (the slot's base group was sized at
         # admission and can't be extended in place)
         self.slot_grown: List[List[int]] = [[] for _ in range(n_slots)]
+        # chaos plane: transient allocation-failure injection. The hook is
+        # queried at the *call sites that start new work* (scheduler
+        # admission, engine growth pre-pass) — deliberately NOT inside
+        # can_admit_pages, which PrefixCache.evict_until loops on: a hard
+        # failure there would flush the whole prefix tree chasing pages an
+        # injected fault withholds. Deferral, not eviction, is the
+        # graceful-degradation contract for alloc faults.
+        self.fault_hook = None           # () -> bool: alloc window active?
+        self.alloc_faults = 0
+
+    def alloc_fault(self) -> bool:
+        """True while an injected allocation-failure window is active —
+        callers defer admissions/growth for the window (counted)."""
+        if self.fault_hook is not None and self.fault_hook():
+            self.alloc_faults += 1
+            return True
+        return False
 
     def _slot_group(self, slot: int, page: int) -> str:
         """Arena group of one slot-owned page (sharing mode: one group per

@@ -61,6 +61,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
+from .faults import HostTierFault
 from .kv_cache import PagedKVCache
 
 
@@ -139,6 +140,12 @@ class PrefixCache:
         self.cold_has = None         # (key) -> bool
         self.cold_faults = 0
         self.cold_stores = 0
+        # chaos plane: host-tier failures survived by the cold paths —
+        # a failed store degrades to discard-on-evict, a failed load undoes
+        # the page adoption (the suffix re-prefills from tokens instead of
+        # serving a missing/corrupt cold page)
+        self.cold_store_failures = 0
+        self.cold_fault_failures = 0
 
     # -- tree walk -----------------------------------------------------
     def _walk(self, tokens):
@@ -294,9 +301,15 @@ class PrefixCache:
             # cold tier: the leaf's page survives eviction on the host
             # (quantized per the pool's cold_dtype) instead of being
             # discarded — fault_cold re-adopts it on the next matching
-            # admission, saving the suffix's re-prefill
-            self.cold_store(self._path_key(nd), nd.page)
-            self.cold_stores += 1
+            # admission, saving the suffix's re-prefill. A host-tier write
+            # fault degrades to the discard-on-evict behaviour (the page is
+            # still released; the content re-prefills from tokens later) —
+            # eviction must complete either way.
+            try:
+                self.cold_store(self._path_key(nd), nd.page)
+                self.cold_stores += 1
+            except HostTierFault:
+                self.cold_store_failures += 1
         self.kv.tree_release_page(nd.page, nd.name)
         if count:
             self.evictions += 1
@@ -352,7 +365,16 @@ class PrefixCache:
             name = f"{self.kv.name}:px{self._next_id}"
             self._next_id += 1
             page = self.kv.tree_adopt_page(name)
-            self.cold_loader(key, page)
+            try:
+                self.cold_loader(key, page)
+            except HostTierFault:
+                # read fault or checksum-caught corruption: undo the
+                # adoption (page + arena group back to the pool) and stop —
+                # admission proceeds without the cold chunk and the suffix
+                # re-prefills from tokens (never from a bad cold page)
+                self.kv.tree_release_page(page, name)
+                self.cold_fault_failures += 1
+                break
             nd = RadixNode(toks[i:i + ps], page, node, name)
             nd.last_used = self._tick
             self._attach(node, nd)
@@ -423,6 +445,10 @@ class PrefixCache:
         if self.cold_store is not None:
             out["cold_stores"] = self.cold_stores
             out["cold_faults"] = self.cold_faults
+            if self.cold_store_failures or self.cold_fault_failures:
+                out["cold_failures"] = {
+                    "store": self.cold_store_failures,
+                    "load": self.cold_fault_failures}
         if self.kv is not None:
             out["cow_forks"] = self.kv.cow_forks
         return out

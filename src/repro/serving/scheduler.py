@@ -185,7 +185,10 @@ class TokenBudgetScheduler:
         pressure cold cached pages are LRU-evicted before admission stalls.
         Requests that can never fit are failed rather than left to deadlock
         the queue. Admission stops at the first unadmittable candidate of
-        the (possibly hit-ordered) queue — no bypass."""
+        the (possibly hit-ordered) queue — no bypass. An ``alloc_fail``
+        fault window (kv_cache.alloc_fault) defers paged admission for the
+        quantum instead — deferral, never eviction, so a transient
+        allocator fault cannot flush the prefix tree."""
         free = [s for s, r in enumerate(rt.active) if r is None]
         taken: List = []
         if rt.kv is None:
@@ -196,6 +199,8 @@ class TokenBudgetScheduler:
                 req.slot = free.pop(0)
                 self._place(rt, req, replay_from=0, now=now)
                 taken.append(req)
+            return taken
+        if rt.kv.alloc_fault():
             return taken
         for req in self.order_queue(rt):
             if not free:
@@ -224,8 +229,8 @@ class TokenBudgetScheduler:
             # growth mode admits on the prompt's pages only; decode pages
             # are allocated at page-boundary crossings (grow_slot), so the
             # can-never-fit check still uses the full extent
-            need = (min(len(req.tokens), eng.max_seq) if eng.grow_pages
-                    else full)
+            need = (min(len(req.tokens), eng.max_seq)
+                    if eng.grow_pages and not rt.grow_degraded else full)
             if rt.kv.pages_for(full) > rt.kv.n_pages:
                 # can never fit, even with an empty pool: fail it rather
                 # than deadlock the queue forever

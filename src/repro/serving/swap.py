@@ -25,6 +25,7 @@ Two swap flows share the PCIe bus model (``core.pcie``):
 from __future__ import annotations
 
 import functools
+import zlib
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
@@ -35,6 +36,7 @@ from ..configs.base import ModelConfig
 from ..core.costmodel import model_costs, param_count
 from ..core.pcie.bus import BusSpec, CopyRequest, bw_of
 from ..core.simulator import DeviceSpec
+from .faults import ColdPageCorrupt, HostTierFault
 
 
 def model_bytes(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
@@ -111,10 +113,21 @@ def dequantize_page(q: np.ndarray, scale: float) -> np.ndarray:
 @dataclass
 class _HostPage:
     """One swapped KV page: per-pool-leaf host arrays (flat, in pool tree
-    order) plus per-leaf scales when quantized (None = exact)."""
+    order) plus per-leaf scales when quantized (None = exact). ``crc`` is
+    the CRC32 of the stored representation, recorded at put time and
+    re-verified at get time — a mismatch means the host copy rotted and
+    must not be served."""
     leaves: List[np.ndarray]
     scales: Optional[List[float]]
     nbytes: int
+    crc: int = 0
+
+
+def _page_crc(leaves: List[np.ndarray]) -> int:
+    crc = 0
+    for a in leaves:
+        crc = zlib.crc32(np.ascontiguousarray(a).tobytes(), crc)
+    return crc & 0xFFFFFFFF
 
 
 def _page_leaves(pools) -> List[Tuple[object, int]]:
@@ -165,21 +178,37 @@ class HostSwapPool:
     as :class:`CopyRequest` flows (``d2h`` puts, ``h2d`` gets) so swap
     traffic can be replayed through the PCIe CFS and charged against the
     owning class's bandwidth; :meth:`pcie_seconds` is the uncontended bus
-    occupancy of everything logged so far."""
+    occupancy of everything logged so far.
+
+    Chaos plane: with ``faults`` attached, ``put`` raises
+    :class:`HostTierFault` inside a ``swap_write_fail`` window (before any
+    host state mutates) and ``get`` raises inside a ``swap_read_fail``
+    window (the page stays resident for the retry). A ``page_corrupt``
+    point event flips bytes in the stored host page; every page carries a
+    CRC32 recorded at put time, and ``get`` re-verifies it when ``verify``
+    is on — a mismatch discards the host copy and raises
+    :class:`ColdPageCorrupt` instead of serving rotted KV. ``verify=False``
+    is the naive-engine ablation: corruption is served silently."""
 
     def __init__(self, cold_dtype: str = "int8", *, tenant: str = "kv",
                  priority: str = "BE", nice: int = 1,
-                 bus: Optional[BusSpec] = None):
+                 bus: Optional[BusSpec] = None, faults=None,
+                 verify: bool = True):
         assert cold_dtype in ("int8", "fp16"), cold_dtype
         self.cold_dtype = cold_dtype
         self.tenant, self.priority, self.nice = tenant, priority, nice
         self.bus = bus or BusSpec()
+        self.faults = faults
+        self.verify = verify
         self.pages: Dict[object, _HostPage] = {}
         self.copies: List[CopyRequest] = []
         self.bytes_to_host = 0
         self.bytes_to_device = 0
         self.puts = 0
         self.gets = 0
+        self.write_faults = 0
+        self.read_faults = 0
+        self.corruptions = 0
         self._rid = 0
 
     def __contains__(self, key) -> bool:
@@ -200,7 +229,14 @@ class HostSwapPool:
     # -- device -> host ------------------------------------------------
     def put(self, pools, key, page: int, t: float = 0.0) -> int:
         """Copy device page ``page`` to host under ``key``; returns the
-        bytes moved over the bus (the cold tier's compressed size)."""
+        bytes moved over the bus (the cold tier's compressed size). Raises
+        :class:`HostTierFault` inside an injected write-fault window —
+        before any host state mutates, so the caller may retry or fall
+        back without cleanup here."""
+        if self.faults is not None and self.faults.active(
+                "swap_write_fail", t, target=self.tenant):
+            self.write_faults += 1
+            raise HostTierFault("swap_write_fail", key)
         assert key not in self.pages, key
         leaves, scales, nbytes = [], [], 0
         for leaf, _ax in _page_leaves(pools):
@@ -216,7 +252,7 @@ class HostSwapPool:
                 nbytes += data.nbytes
         self.pages[key] = _HostPage(leaves,
                                     scales if self.cold_dtype == "int8"
-                                    else None, nbytes)
+                                    else None, nbytes, crc=_page_crc(leaves))
         self.bytes_to_host += nbytes
         self.puts += 1
         self._log(nbytes, "d2h", t)
@@ -226,8 +262,31 @@ class HostSwapPool:
     def get(self, pools, key, dest_page: int, t: float = 0.0):
         """Fault the host page ``key`` back into device page ``dest_page``
         (dequantizing in int8 mode) and drop the host copy. Returns
-        (updated pools, bytes moved)."""
-        hp = self.pages.pop(key)
+        (updated pools, bytes moved).
+
+        Chaos plane: raises :class:`HostTierFault` inside a read-fault
+        window (page stays resident — a later retry can succeed); a
+        ``page_corrupt`` point event rots the stored copy, which the CRC32
+        check then catches (``verify`` on): the corrupt page is dropped
+        and :class:`ColdPageCorrupt` raised so the caller re-prefills
+        instead of serving bad KV."""
+        if self.faults is not None and self.faults.active(
+                "swap_read_fail", t, target=self.tenant):
+            self.read_faults += 1
+            raise HostTierFault("swap_read_fail", key)
+        hp = self.pages[key]
+        if self.faults is not None and self.faults.fires(
+                "page_corrupt", t, target=self.tenant):
+            if hp.leaves and hp.leaves[0].size:
+                rot = hp.leaves[0].copy()
+                flat = rot.reshape(-1).view(np.uint8)
+                flat[0] ^= 0xFF
+                hp.leaves[0] = rot
+        if self.verify and _page_crc(hp.leaves) != hp.crc:
+            self.corruptions += 1
+            del self.pages[key]
+            raise ColdPageCorrupt(key)
+        del self.pages[key]
         flat = [l for l, _ in _page_leaves(pools)]
         axes = [a for _, a in _page_leaves(pools)]
         out = []
@@ -255,10 +314,15 @@ class HostSwapPool:
                    for c in self.copies)
 
     def stats(self) -> dict:
-        return {"cold_dtype": self.cold_dtype,
-                "pages_resident": len(self.pages),
-                "host_bytes": self.host_bytes,
-                "puts": self.puts, "gets": self.gets,
-                "bytes_to_host": self.bytes_to_host,
-                "bytes_to_device": self.bytes_to_device,
-                "pcie_s": self.pcie_seconds()}
+        out = {"cold_dtype": self.cold_dtype,
+               "pages_resident": len(self.pages),
+               "host_bytes": self.host_bytes,
+               "puts": self.puts, "gets": self.gets,
+               "bytes_to_host": self.bytes_to_host,
+               "bytes_to_device": self.bytes_to_device,
+               "pcie_s": self.pcie_seconds()}
+        if self.write_faults or self.read_faults or self.corruptions:
+            out["faults"] = {"write": self.write_faults,
+                             "read": self.read_faults,
+                             "corrupt": self.corruptions}
+        return out
