@@ -3,9 +3,12 @@
 # multiplexing, VRAM-channel coloring (reverse engineering + MLP hash fit +
 # colored allocator + SPT), PCIe completely fair scheduling, the contention
 # simulator, and the resource controller.
-from . import coloring, compute, controller, costmodel, pcie, simulator, tenancy
-from .compute import ComputePolicy, ElasticMeshPartitioner
+from . import (coloring, compute, controller, costmodel, interconnect, pcie,
+               simulator, tenancy)
+from .compute import ComputePolicy, ElasticMeshPartitioner, LoadSignal
 from .controller import ResourcePlan, grid_search, memory_bound_ops
+from .interconnect import (Flow, FlowCompletion, InterconnectSim, Link,
+                           Topology, ring_allgather_flows)
 from .simulator import (DeviceSpec, GPU_DEVICES, GPUSimulator, Kernel,
                         SimResult, TPU_V5E, Tenant, apollo_like_trace,
                         poisson_trace, request_kernels)

@@ -127,3 +127,13 @@ class ElasticMeshPartitioner:
         ls_chips = max(floor, min(cap, want))
         self.assignments = {"LS": ls_chips, "BE": self.total_chips - ls_chips}
         return dict(self.assignments)
+
+    def rebalance_from_signal(self, sig: LoadSignal) -> dict:
+        """Device lending from the same windowed :class:`LoadSignal` the
+        online controller consumes: ``sig.ls_load`` (demand over capacity)
+        becomes the LS slice demand, so moving a device between slices at a
+        plan boundary is the cross-device analogue of a tidal ``sm_be``
+        re-plan (disaggregated serving drives this with LS == the prefill
+        slice). Same clamp guarantees as :meth:`rebalance`: the device
+        count is conserved and the LS slice never drops below its floor."""
+        return self.rebalance(sig.ls_load)

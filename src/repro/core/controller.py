@@ -59,6 +59,12 @@ class ResourcePlan:
     # prompt processing — the co-location that inflates LS TBT — without
     # also cutting BE's SM share or decode cadence
     prefill_budget: Optional[int] = None
+    # host-tier budget: max KV pages faulted back from the host per engine
+    # quantum (None = the engine's own default). The swap_pcie op is
+    # already class-charged, so capping BE swap-in bandwidth here lets a
+    # tidal snap-back trade BE's host-fault traffic against ch_be instead
+    # of letting a BE swap storm ride the shrunken channel split
+    swap_quantum_pages: Optional[int] = None
 
 
 def memory_bound_ops(cfg: ModelConfig, B: int, S: int, mode: str,
@@ -99,12 +105,22 @@ def grid_search(dev: DeviceSpec, ls_cfgs: Sequence[ModelConfig],
                 thres_grid=(0.2, 0.4, 0.6),
                 pairs_per_model: int = 6, seed: int = 0,
                 ls_concurrency: int = 1,
-                prefill_budget: Optional[int] = None) -> ResourcePlan:
+                prefill_budget: Optional[int] = None,
+                prefix_hit: float = 0.0,
+                swap_quantum_pages: Optional[int] = None) -> ResourcePlan:
+    """``prefix_hit`` is the measured prefix-cache hit rate (hit tokens /
+    prompt tokens, e.g. :func:`measured_prefix_hit`): the BE profiling pool
+    charges prefill only for the uncached suffix, so a warm cache stops the
+    planner from over-reserving prefill bandwidth against dense prompt
+    traffic that never materialises — warm-cache plans are (weakly) more
+    BE-generous at the same LS inflation bound."""
     rng = np.random.default_rng(seed)
+    hit = min(max(float(prefix_hit), 0.0), 1.0)
     ls_pool = [k for cfg in ls_cfgs
                for k in request_kernels(cfg, 1, 128, "prefill", dev)]
     be_pool = [k for cfg in be_cfgs
-               for k in request_kernels(cfg, 8, 256, "prefill", dev)]
+               for k in request_kernels(cfg, 8, 256, "prefill", dev,
+                                        prefix=int(hit * 256))]
     n = min(len(ls_pool) * len(be_pool),
             pairs_per_model * len(ls_cfgs) * len(be_cfgs))
     pairs = [(ls_pool[rng.integers(len(ls_pool))],
@@ -130,7 +146,8 @@ def grid_search(dev: DeviceSpec, ls_cfgs: Sequence[ModelConfig],
         sm_be=sm_be, ch_be=ch_be, thres_dram=thres,
         ls_channels=tuple(range(dev.num_channels - n_be)),
         be_channels=tuple(range(dev.num_channels - n_be, dev.num_channels)),
-        max_ls_inflation=worst, prefill_budget=prefill_budget)
+        max_ls_inflation=worst, prefill_budget=prefill_budget,
+        swap_quantum_pages=swap_quantum_pages)
 
 
 # ---------------------------------------------------------------------------
@@ -182,7 +199,7 @@ def lending_plan(base: ResourcePlan,
     C = num_channels or (len(base.ls_channels) + len(base.be_channels))
     return replace(base, sm_be=1.0, ch_be=1.0,
                    be_channels=tuple(range(C)), max_ls_inflation=1.0,
-                   prefill_budget=None)
+                   prefill_budget=None, swap_quantum_pages=None)
 
 
 def tidal_frontier(plan: ResourcePlan,
@@ -202,7 +219,10 @@ def frontier_search(dev: DeviceSpec, ls_cfgs: Sequence[ModelConfig],
                     ch_grid=(1 / 6, 1 / 4, 1 / 3, 1 / 2),
                     thres_grid=(0.2, 0.4, 0.6),
                     pairs_per_model: int = 6, seed: int = 0,
-                    prefill_budget: Optional[int] = None) -> PlanFrontier:
+                    prefill_budget: Optional[int] = None,
+                    prefix_hit: float = 0.0,
+                    swap_quantum_pages: Optional[int] = None
+                    ) -> PlanFrontier:
     """Offline phase of the online control plane: one grid search per LS-load
     regime. A regime at ``load`` is evaluated with ``round(load *
     max_concurrency)`` concurrent LS kernels in the pairwise-inflation
@@ -212,7 +232,12 @@ def frontier_search(dev: DeviceSpec, ls_cfgs: Sequence[ModelConfig],
     BE-prefill-tokens-per-quantum throttle to every *contended* regime (the
     lending plan stays unthrottled), so a tidal re-plan tightens BE prompt
     processing — the TBT hazard — together with BE's SM share, and releases
-    both when LS ebbs."""
+    both when LS ebbs. ``swap_quantum_pages`` does the same for BE's
+    host-tier fault bandwidth (the ResourcePlan knob the engine applies at
+    plan adoption); ``prefix_hit`` feeds the *measured* prefix-cache hit
+    rate into every regime's profiling pool (see :func:`grid_search`), so
+    the frontier stops assuming dense prefill traffic when the cache is
+    warm."""
     entries: List[Tuple[float, ResourcePlan]] = []
     for load in sorted(set(load_grid)):
         assert load > 0, "load 0 is the lending plan; keep it off load_grid"
@@ -222,10 +247,28 @@ def frontier_search(dev: DeviceSpec, ls_cfgs: Sequence[ModelConfig],
                            ch_grid=ch_grid, thres_grid=thres_grid,
                            pairs_per_model=pairs_per_model, seed=seed,
                            ls_concurrency=conc,
-                           prefill_budget=prefill_budget)
+                           prefill_budget=prefill_budget,
+                           prefix_hit=prefix_hit,
+                           swap_quantum_pages=swap_quantum_pages)
         entries.append((load, plan))
     entries.insert(0, (0.0, lending_plan(entries[-1][1], dev.num_channels)))
     return PlanFrontier(entries)
+
+
+def measured_prefix_hit(engine) -> float:
+    """Engine-wide measured prefix-cache hit rate (hit tokens over prompt
+    tokens, across every tenant carrying a prefix cache) — the feedback
+    the re-planning path hands :func:`frontier_search` via ``prefix_hit``,
+    closing the loop the static planner left open (it assumed dense
+    prefill traffic regardless of cache warmth). 0.0 with no prefix cache
+    or no traffic yet."""
+    hit = tot = 0
+    for rt in engine.tenants.values():
+        if rt.prefix is not None:
+            st = rt.prefix.stats()
+            hit += st["hit_tokens"]
+            tot += st["prompt_tokens"]
+    return hit / tot if tot else 0.0
 
 
 # ---------------------------------------------------------------------------

@@ -177,7 +177,8 @@ def layer_costs(cfg: ModelConfig, B, Sq, Skv, kind, moe_layer: bool,
 
 def model_costs(cfg: ModelConfig, B: int, S: int, mode: str,
                 kv_write=None, prefix: int = 0,
-                chunk=None, swap_bytes: int = 0) -> List[OpCost]:
+                chunk=None, swap_bytes: int = 0,
+                xfer_bytes: int = 0) -> List[OpCost]:
     """mode: train | prefill | decode. decode: Sq=1, Skv=S. train adds
     backward (2x fwd flops for grads) via the TRAIN_MULT on the caller side —
     here we return FORWARD costs; see step_costs(). ``kv_write`` (decode
@@ -195,7 +196,10 @@ def model_costs(cfg: ModelConfig, B: int, S: int, mode: str,
     tax and the per-chunk preemption granularity. ``swap_bytes`` appends a
     zero-FLOP ``swap_pcie`` op carrying the request's KV swap traffic (host
     tier page faults), so swap cost flows through the same per-class
-    bandwidth accounting as every other byte."""
+    bandwidth accounting as every other byte. ``xfer_bytes`` likewise
+    appends a zero-FLOP ``kv_xfer`` op: the request's cross-device KV
+    page-group transfer (disaggregated prefill/decode, core.interconnect),
+    charged to the owning class's bandwidth split like swap traffic."""
     if mode == "prefill" and prefix:
         prefix = min(int(prefix), max(S - 1, 0))
     else:
@@ -212,6 +216,8 @@ def model_costs(cfg: ModelConfig, B: int, S: int, mode: str,
             start = end
         if swap_bytes > 0:
             ops.append(OpCost("swap_pcie", 0.0, float(swap_bytes)))
+        if xfer_bytes > 0:
+            ops.append(OpCost("kv_xfer", 0.0, float(xfer_bytes)))
         return ops
     if mode == "prefill" and prefix:
         Sq, Skv = S - prefix, S
@@ -240,6 +246,8 @@ def model_costs(cfg: ModelConfig, B: int, S: int, mode: str,
                       (cfg.d_model * cfg.vocab_size + T * cfg.vocab_size) * bp))
     if swap_bytes > 0:
         ops.append(OpCost("swap_pcie", 0.0, float(swap_bytes)))
+    if xfer_bytes > 0:
+        ops.append(OpCost("kv_xfer", 0.0, float(xfer_bytes)))
     return ops
 
 

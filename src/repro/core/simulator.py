@@ -51,7 +51,8 @@ class Kernel:
 def request_kernels(cfg: ModelConfig, B: int, S: int, mode: str,
                     dev: DeviceSpec, max_kernels: int = 24,
                     kv_write=None, prefix: int = 0,
-                    chunk=None, swap_bytes: int = 0) -> List[Kernel]:
+                    chunk=None, swap_bytes: int = 0,
+                    xfer_bytes: int = 0) -> List[Kernel]:
     """``chunk`` (prefill only) models chunked prefill: the op stream is
     coalesced into one kernel per prompt chunk — each kernel carries the
     chunk's re-read tax from the cost model, and the kernel boundary is the
@@ -59,9 +60,13 @@ def request_kernels(cfg: ModelConfig, B: int, S: int, mode: str,
     what lets a co-scheduled LS tenant interleave mid-prompt. ``swap_bytes``
     adds the request's KV host-tier fault traffic as a zero-FLOP
     memory-bound op, charged at the owning class's bandwidth split like any
-    other byte."""
+    other byte; ``xfer_bytes`` does the same for the request's cross-device
+    KV page-group transfer (disaggregated prefill/decode over
+    core.interconnect), so multi-device runs charge transfer time to the
+    owning class."""
     ops = model_costs(cfg, B, S, mode, kv_write=kv_write, prefix=prefix,
-                      chunk=chunk, swap_bytes=swap_bytes)
+                      chunk=chunk, swap_bytes=swap_bytes,
+                      xfer_bytes=xfer_bytes)
     span = max(S - min(int(prefix), max(S - 1, 0)), 1)
     if chunk and mode == "prefill" and chunk < span:
         n_chunks = -(-span // int(chunk))

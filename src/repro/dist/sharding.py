@@ -8,10 +8,22 @@ any dim that doesn't divide the model-axis size replicates, so the same rules
 hold on 1x1 test meshes, the 8-device fake mesh of the dry-run tests, and the
 16x16 production mesh.
 
-Conventions:
+Conventions (the pure rule is ``partition_dims`` — directly testable against
+production mesh sizes without fake devices):
   * batch dims shard over ("pod",)+("data",) — see ``batch_axes``,
   * embeddings shard the vocab dim on "model"; other >=2-D params shard their
     largest divisible dim on "model"; 1-D params (norm scales) replicate,
+  * MoE expert tensors (``.../experts/...``, shaped ``[..., E, din, dout]``
+    with an optional leading vmapped layer dim) shard the expert dim on the
+    mesh's "expert" axis when it has one, and "model" only considers the
+    matmul dims after it — the generic largest-dim rule used to put "model"
+    on E, which shards the *router's* axis and leaves every expert matmul
+    replicated,
+  * MLA down-projections (``wq_a``/``wkv_a``) never shard their trailing
+    latent dim (it feeds the latent RMSNorm); up-projections
+    (``wq_b``/``wk_b``/``wv_b``, shaped ``[..., latent, heads, head_dim]``)
+    shard heads first and never the shared latent dim — the generic rule
+    picked the latent when ``q_lora_rank > num_heads``,
   * attention params honour ``set_attn_fallback``: "headdim" (default) may
     shard the trailing head_dim, "replicate" never does — the knob the
     dry-run exposes for archs whose head counts don't divide the mesh.
@@ -84,30 +96,70 @@ def _path_str(path) -> str:
     return "/".join(out)
 
 
+def partition_dims(name, shape, *, model: int = 1, expert: int = 1,
+                   attn_fallback=None) -> tuple:
+    """Mesh-axis name (or None) per dim of one param — the pure sharding
+    rule behind :func:`param_pspecs` (module docstring conventions).
+    ``model``/``expert`` are the mesh axis sizes; a dim that doesn't divide
+    its axis replicates, so the rule is safe at any mesh shape."""
+    if attn_fallback is None:
+        attn_fallback = _ATTN_FALLBACK
+    nd = len(shape)
+    s = [None] * nd
+    if nd < 2:
+        return tuple(s)
+
+    def fits(i, size):
+        return size > 1 and shape[i] >= size and shape[i] % size == 0
+
+    lo = 0
+    if "/experts/" in f"/{name}/" and nd >= 3:
+        # [..., E, din, dout]: expert dim on "expert"; "model" only
+        # considers the per-expert matmul dims after it (never E, never a
+        # leading vmapped layer dim)
+        e = nd - 3
+        if fits(e, expert):
+            s[e] = "expert"
+        lo = e + 1
+    cands = list(range(lo, nd))
+    leaf = name.rsplit("/", 1)[-1]
+    if leaf in ("wq_a", "wkv_a"):
+        # MLA down-projection [*, d_model, latent]: the latent output feeds
+        # the latent RMSNorm — keep it whole, shard the model dim
+        cands = sorted((i for i in cands if i != nd - 1),
+                       key=lambda i: -shape[i])
+    elif leaf in ("wq_b", "wk_b", "wv_b") and nd >= 3:
+        # MLA up-projection [*, latent, heads, head_dim]: heads are the
+        # tensor-parallel axis; the shared latent input never shards
+        cands = sorted((i for i in cands if i != nd - 3),
+                       key=lambda i: (i != nd - 2, -shape[i]))
+    else:
+        # canonical tensor-parallel dim first, then largest divisible dim
+        cands.sort(key=lambda i: -shape[i])
+        if "unembed" in name:
+            cands = [nd - 1] + [i for i in cands if i != nd - 1]
+        elif "embed" in name:           # embed / pos_embed: vocab-dim first
+            cands = [0] + [i for i in cands if i != 0]
+    skip_last = ("attn" in name and attn_fallback == "replicate")
+    for i in cands:
+        if skip_last and i == nd - 1:
+            continue
+        if fits(i, model):
+            s[i] = "model"
+            break
+    return tuple(s)
+
+
 def param_pspecs(params, mesh):
     """NamedSharding tree for a params pytree (structure-preserving)."""
     msize = mesh.shape.get("model", 1)
-    has_model = "model" in mesh.axis_names and msize > 1
+    esize = mesh.shape.get("expert", 1)
+    model = msize if "model" in mesh.axis_names else 1
+    expert = esize if "expert" in mesh.axis_names else 1
 
     def spec_for(path, leaf):
-        shp = leaf.shape
-        s = [None] * len(shp)
-        if len(shp) < 2 or not has_model:
-            return NamedSharding(mesh, P(*s))
-        name = _path_str(path)
-        # canonical tensor-parallel dim first, then largest divisible dim
-        order = sorted(range(len(shp)), key=lambda i: -shp[i])
-        if "unembed" in name:
-            order = [len(shp) - 1] + [i for i in order if i != len(shp) - 1]
-        elif "embed" in name:           # embed / pos_embed: vocab-dim first
-            order = [0] + [i for i in order if i != 0]
-        skip_last = ("attn" in name and _ATTN_FALLBACK == "replicate")
-        for i in order:
-            if skip_last and i == len(shp) - 1:
-                continue
-            if shp[i] % msize == 0 and shp[i] >= msize:
-                s[i] = "model"
-                break
-        return NamedSharding(mesh, P(*s))
+        dims = partition_dims(_path_str(path), leaf.shape,
+                              model=model, expert=expert)
+        return NamedSharding(mesh, P(*dims))
 
     return jax.tree_util.tree_map_with_path(spec_for, params)

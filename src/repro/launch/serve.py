@@ -11,7 +11,9 @@ admission with --paged, optionally through the ragged Pallas flash-decode
 kernel with --use-flash; the full KV memory hierarchy with --grow-pages /
 --swap / --cold-dtype). With --backend sim the same request stream drives
 the contention simulator instead (pod-scale what-if on the full configs;
-see also benchmarks/fig12_invram.py).
+see also benchmarks/fig12_invram.py). --disagg swaps the single engine for
+the disaggregated prefill/decode pair over the modeled interconnect
+(serving.disagg; see benchmarks/disagg_bench.py).
 """
 import argparse
 
@@ -96,6 +98,21 @@ def main():
                          "watchdog, no shedding, unverified cold pages")
     ap.add_argument("--fault-budget", type=int, default=8,
                     help="recoveries per degradation-ladder rung per tenant")
+    ap.add_argument("--disagg", action="store_true",
+                    help="disaggregated prefill/decode: pin prompts to a "
+                         "prefill device slice, stream finished KV page "
+                         "groups to the decode slice over the modeled "
+                         "interconnect, and lend devices tidally between "
+                         "slices from the windowed load signal (jax "
+                         "backend; implies --paged)")
+    ap.add_argument("--devices", type=int, default=2,
+                    help="modeled device count for --disagg")
+    ap.add_argument("--prefill-devices", type=int, default=1,
+                    help="initial prefill-slice size for --disagg")
+    ap.add_argument("--no-pipeline", action="store_true",
+                    help="--disagg: ship each KV page group whole at the "
+                         "prefill epilogue instead of layer-pipelined "
+                         "per-chunk streaming")
     ap.add_argument("--max-queue", type=int, default=4096,
                     help="per-tenant submit backpressure bound (excess "
                          "requests are rejected, not queued)")
@@ -150,6 +167,34 @@ def main():
         print(f"plan: SM_BE={plan.sm_be:.2f} Ch_BE={plan.ch_be:.2f} "
               f"Thres_DRAM={plan.thres_dram:.2f} "
               f"(worst LS inflation {plan.max_ls_inflation:.2f}x)")
+
+    if args.disagg:
+        if args.backend != "jax":
+            ap.error("--disagg runs on the jax backend")
+        import json
+        from ..serving import DisaggregatedEngine
+        dis = DisaggregatedEngine(
+            max_seq=args.prompt_len + args.max_new + 4,
+            page_size=args.page_size, chunk_size=args.chunk_size,
+            token_budget=args.token_budget, kv_pages=args.kv_pages,
+            slots_prefill=args.slots, slots_decode=args.slots,
+            n_devices=args.devices, n_prefill=args.prefill_devices,
+            pipeline=not args.no_pipeline,
+            control_interval=args.control_interval,
+            use_flash=args.use_flash, prefix_cache=args.prefix_cache)
+        names = []
+        for name in args.ls:
+            cfg = smoke_config(name).replace(activation_dtype="float32")
+            dis.add_tenant(TenantSpec(f"ls:{name}", "LS", nice=10_000), cfg)
+            names.append(f"ls:{name}")
+        rng = np.random.default_rng(0)
+        for _ in range(args.requests):
+            for t in names:
+                dis.submit(t, rng.integers(0, 256, args.prompt_len).tolist(),
+                           max_new=args.max_new)
+        dis.run_until_idle()
+        print(json.dumps(dis.metrics(), indent=1))
+        return
 
     grow = args.grow_pages or args.swap
     eng = ServingEngine(

@@ -698,6 +698,15 @@ class _JaxBackend:
             rt.prefix.donate(s, req.tokens, L)
         if len(req.output) >= max(req.max_new, 1) or rt.pos[s] >= eng.max_seq:
             self._finish(rt, s)
+        elif eng.migrate_hook is not None and eng.migrate_hook(rt, req):
+            # disaggregated handoff: the decode slice owns the request now;
+            # the hook serialized the page group, so only free the slot
+            # (the prefix donation above already happened — no double
+            # donation, and no local decode step runs for this request)
+            self._drop_slot_pages(rt, s)
+            rt.active[s] = None
+            rt.pos[s] = 0
+            rt.last_tok[s] = 0
 
     def _prefill_monolithic(self, rt: _TenantRT, reqs: List[Request]) -> int:
         """Fallback prompt processing for non-chunkable models (SSM state,
@@ -768,8 +777,13 @@ class _JaxBackend:
                         if c.start + Sq >= len(c.req.tokens)]
                 if done:
                     arg = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+                hook = self.engine.chunk_hook
                 for c in group:
                     c.req.prefill_pos = c.start + Sq
+                    if hook is not None and c.start + Sq < len(c.req.tokens):
+                        # mid-prompt commit: stream the newly completed KV
+                        # pages while the remaining chunks still run
+                        hook(rt, c.req)
                 for c in done:
                     self._seed_first_token(rt, c.req, int(arg[c.slot]))
         return tokens
@@ -1117,6 +1131,16 @@ class ServingEngine:
         assert cold_dtype in ("int8", "fp16"), cold_dtype
         self.cold_dtype = cold_dtype
         self.swap_quantum_pages = max(int(swap_quantum_pages), 1)
+        # construction-time default the tidal controller restores when a
+        # plan stops carrying a swap_quantum_pages override (apply_plan)
+        self._default_swap_quantum = self.swap_quantum_pages
+        # disaggregation seams (serving.disagg): chunk_hook(rt, req) fires
+        # after each mid-prompt chunk commits (layer-pipelined KV page-group
+        # streaming overlaps the remaining prefill); migrate_hook(rt, req)
+        # fires when prefill completes on a still-live request and returns
+        # True to take the slot (the request leaves this engine)
+        self.chunk_hook = None
+        self.migrate_hook = None
         # radix-tree copy-on-write KV page sharing (serving.prefix_cache):
         # common prompt prefixes map cached pages into new slots' tables and
         # only the uncached suffix is prefilled
@@ -1419,6 +1443,12 @@ class ServingEngine:
         # tokens per quantum, not only BE's SM share
         self.scheduler.set_prefill_budget(
             getattr(plan, "prefill_budget", None))
+        # swap-aware knob: a contended plan throttles BE host-tier fault
+        # bandwidth (pages per quantum) together with sm_be/ch_be; a plan
+        # without the knob restores the construction-time default
+        sq = getattr(plan, "swap_quantum_pages", None)
+        self.swap_quantum_pages = (self._default_swap_quantum if sq is None
+                                   else max(int(sq), 1))
         moved = 0
         pinned = []
         if self.arena is not None and (prev is None

@@ -1,0 +1,228 @@
+"""Disaggregated prefill/decode serving (serving.disagg).
+
+Oracle contracts:
+  * decode tokens bit-equal to a single co-located engine (fp16 page-group
+    passthrough + greedy decode), pipelined or all-at-once transfer,
+  * seeded multi-device runs replay bit-identically (outputs + flow
+    schedule + lending decisions),
+  * device lending from the LoadSignal conserves the device count and
+    never drops the prefill slice below its floor (property test),
+  * the swap-aware plan knob and the measured-prefix-hit feedback thread
+    through the control plane.
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.compute import ElasticMeshPartitioner, LoadSignal
+from repro.core.controller import (ResourcePlan, grid_search, lending_plan,
+                                   measured_prefix_hit)
+from repro.core.simulator import GPU_DEVICES
+from repro.core.tenancy import TenantSpec
+from repro.serving import DisaggregatedEngine, ServingEngine
+
+MAX_SEQ = 32
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    import jax
+    from repro.configs import smoke_config
+    from repro.models import transformer as tf
+    cfg = smoke_config("stablelm-1.6b").replace(num_layers=1,
+                                                activation_dtype="float32")
+    return cfg, tf.init_params(jax.random.key(7), cfg)
+
+
+def _prompts(seed=0, lens=(9, 5, 13, 7, 4)):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, 50, size=L).tolist() for L in lens]
+
+
+def _baseline_outputs(cfg, params, prompts, max_new=6):
+    eng = ServingEngine(max_seq=MAX_SEQ, paged=True, page_size=4,
+                        chunk_size=4, slots_ls=4, slots_be=4)
+    eng.add_tenant(TenantSpec("ls0", "LS"), cfg, params=params)
+    reqs = [eng.submit("ls0", p, max_new=max_new) for p in prompts]
+    eng.run_until_idle()
+    return [[int(x) for x in r.output] for r in reqs]
+
+
+def _disagg(cfg, params, *, pipeline=True, n_devices=2, n_prefill=1,
+            seed=0, **kw):
+    dis = DisaggregatedEngine(max_seq=MAX_SEQ, page_size=4, chunk_size=4,
+                              n_devices=n_devices, n_prefill=n_prefill,
+                              pipeline=pipeline, seed=seed, **kw)
+    dis.add_tenant(TenantSpec("ls0", "LS"), cfg, params=params)
+    return dis
+
+
+# ---------------------------------------------------------------------------
+# bit-equality oracles
+# ---------------------------------------------------------------------------
+
+def test_disagg_bit_equal_to_colocated(tiny):
+    """Every request's token stream from the disaggregated pair matches the
+    single-engine baseline exactly, and every request actually migrated
+    (transfer bytes > 0, all delivered)."""
+    cfg, params = tiny
+    prompts = _prompts()
+    base = _baseline_outputs(cfg, params, prompts)
+    dis = _disagg(cfg, params)
+    for p in prompts:
+        dis.submit("ls0", p, max_new=6)
+    dis.run_until_idle(max_rounds=5000)
+    assert dis.outputs("ls0") == base
+    m = dis.metrics()
+    assert m["interconnect"]["xfer_bytes"] > 0
+    assert m["migrations"]["delivered"] == len(prompts)
+    assert m["migrations"]["in_flight"] == 0
+
+
+def test_pipelined_bit_equal_to_all_at_once(tiny):
+    """Layer-pipelined chunk streaming vs. whole-group transfer at the
+    prefill epilogue: identical decode tokens and identical total bytes —
+    pipelining only splits the same pages across more, earlier flows."""
+    cfg, params = tiny
+    prompts = _prompts(seed=3, lens=(12, 9, 16))
+    runs = {}
+    for pipeline in (True, False):
+        dis = _disagg(cfg, params, pipeline=pipeline)
+        for p in prompts:
+            dis.submit("ls0", p, max_new=5)
+        dis.run_until_idle(max_rounds=5000)
+        runs[pipeline] = dis
+    assert runs[True].outputs("ls0") == runs[False].outputs("ls0")
+    a, b = (runs[k].metrics()["interconnect"] for k in (True, False))
+    assert a["xfer_bytes"] == b["xfer_bytes"]
+    assert a["flows"] > b["flows"]
+
+
+def test_degenerate_request_finishes_on_prefill_slice(tiny):
+    """max_new=1 requests never migrate (the prefill epilogue finishes them
+    locally) and leave no orphaned wire bytes behind."""
+    cfg, params = tiny
+    dis = _disagg(cfg, params)
+    dis.submit("ls0", list(range(1, 8)), max_new=1)
+    dis.run_until_idle(max_rounds=2000)
+    [out] = dis.outputs("ls0")
+    assert len(out) == 1
+    m = dis.metrics()
+    assert m["migrations"]["started"] == 0
+    assert m["interconnect"]["xfer_bytes"] == 0
+    drt = dis.decode.tenants["ls0"]
+    assert len(drt.host) == 0            # wire buffer fully drained
+
+
+# ---------------------------------------------------------------------------
+# determinism oracle
+# ---------------------------------------------------------------------------
+
+def test_seeded_replay_bit_identical(tiny):
+    """Two seeded runs with identical submissions produce identical
+    fingerprints: outputs, flow schedule (fids, endpoints, sizes, start/end
+    times) and lending decisions."""
+    cfg, params = tiny
+    prompts = _prompts(seed=11, lens=(10, 6, 14, 8))
+
+    def run():
+        dis = _disagg(cfg, params, n_devices=4, n_prefill=2, seed=5)
+        for p in prompts:
+            dis.submit("ls0", p, max_new=6)
+        dis.run_until_idle(max_rounds=5000)
+        return dis.fingerprint()
+
+    assert run() == run()
+
+
+# ---------------------------------------------------------------------------
+# tidal device lending
+# ---------------------------------------------------------------------------
+
+@given(total=st.integers(2, 64), min_ls=st.integers(1, 8),
+       queued=st.integers(0, 40), active=st.integers(0, 16),
+       slots=st.integers(1, 16))
+@settings(max_examples=60, deadline=None)
+def test_rebalance_from_signal_invariants(total, min_ls, queued, active,
+                                          slots):
+    """Property: for any windowed LoadSignal, device lending conserves the
+    device count and keeps the LS (prefill) slice within
+    [min(min_ls, total), total]."""
+    part = ElasticMeshPartitioner(total, min_ls=min_ls)
+    sig = LoadSignal(ls_queued=queued, ls_active=active, ls_slots=slots)
+    out = part.rebalance_from_signal(sig)
+    assert out["LS"] + out["BE"] == total
+    assert out["LS"] >= min(min_ls, total)
+    assert out["BE"] >= 0
+    assert out == part.rebalance(sig.ls_load)     # same clamps as rebalance
+
+
+def test_lending_reacts_to_prefill_drain(tiny):
+    """With a prompt burst the partitioner leans devices toward the prefill
+    slice; once the queue drains the slice shrinks back to its floor —
+    and the device count is conserved at every decision."""
+    cfg, params = tiny
+    dis = _disagg(cfg, params, n_devices=4, n_prefill=2, control_interval=2)
+    for p in _prompts(seed=2, lens=(14, 12, 10, 13, 11, 9)):
+        dis.submit("ls0", p, max_new=6)
+    dis.run_until_idle(max_rounds=5000)
+    log = dis.lending_log
+    assert all(e["prefill_devices"] + e["decode_devices"] == 4 for e in log)
+    assert all(e["prefill_devices"] >= 1 for e in log)
+    assert log[0]["prefill_devices"] > log[-1]["prefill_devices"]
+    assert log[-1]["prefill_devices"] == 1       # floor after the drain
+    cons = dis.work_conservation()
+    assert cons["rounds"] == dis.rounds
+
+
+# ---------------------------------------------------------------------------
+# control-plane satellites: swap-aware knob + measured prefix hit
+# ---------------------------------------------------------------------------
+
+def test_plan_swap_quantum_pages_applied_and_restored(tiny):
+    """apply_plan adopts a plan's swap_quantum_pages throttle and restores
+    the construction-time default when a plan stops carrying one."""
+    cfg, params = tiny
+    eng = ServingEngine(max_seq=MAX_SEQ, paged=True, page_size=4,
+                        swap=True, grow_pages=True, swap_quantum_pages=4)
+    eng.add_tenant(TenantSpec("ls0", "LS"), cfg, params=params)
+    throttled = ResourcePlan(sm_be=0.3, ch_be=0.5, thres_dram=0.5,
+                             ls_channels=(0, 1), be_channels=(2, 3),
+                             max_ls_inflation=1.2, swap_quantum_pages=1)
+    eng.apply_plan(throttled)
+    assert eng.swap_quantum_pages == 1
+    eng.apply_plan(lending_plan(throttled, 8))
+    assert eng.swap_quantum_pages == 4           # default restored
+
+
+def test_grid_search_prefix_hit_relaxes_be_pressure():
+    """Feeding a measured prefix-cache hit rate into the search shrinks the
+    modeled BE prefill pressure: the warm-cache frontier grants BE at least
+    the cold-traffic share (and the knob rides the returned plan)."""
+    dev = GPU_DEVICES["tesla-p40"]
+    from repro.configs import smoke_config
+    cfgs = [smoke_config("stablelm-1.6b")]
+    cold = grid_search(dev, cfgs, cfgs, pairs_per_model=2,
+                       prefix_hit=0.0, swap_quantum_pages=2)
+    warm = grid_search(dev, cfgs, cfgs, pairs_per_model=2,
+                       prefix_hit=0.9, swap_quantum_pages=2)
+    assert cold.swap_quantum_pages == 2
+    assert warm.swap_quantum_pages == 2
+    assert warm.sm_be >= cold.sm_be
+    assert lending_plan(warm, 8).swap_quantum_pages is None
+
+
+def test_measured_prefix_hit_feedback(tiny):
+    """measured_prefix_hit aggregates hit tokens over prompt tokens across
+    tenants: 0 with no traffic, rises once repeated prompts share pages."""
+    cfg, params = tiny
+    eng = ServingEngine(max_seq=MAX_SEQ, paged=True, page_size=4,
+                        chunk_size=4, prefix_cache=True)
+    eng.add_tenant(TenantSpec("ls0", "LS"), cfg, params=params)
+    assert measured_prefix_hit(eng) == 0.0
+    prompt = list(range(1, 17))
+    for _ in range(3):
+        eng.submit("ls0", prompt, max_new=2)
+        eng.run_until_idle()
+    hit = measured_prefix_hit(eng)
+    assert 0.0 < hit <= 1.0

@@ -6,7 +6,8 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS, get_config, smoke_config
-from repro.dist.sharding import hint, param_pspecs, use_mesh
+from repro.dist.sharding import (_path_str, hint, param_pspecs,
+                                 partition_dims, use_mesh)
 from repro.launch.mesh import make_mesh
 from repro.models import transformer as tf
 
@@ -62,6 +63,83 @@ def test_param_pspecs_prod_mesh_divisibility():
     specs = param_pspecs(params, mesh)
     # embed sharded on vocab, mlp on d_ff — spot-check paths
     assert specs["embed"].spec[0] in ("model", None)
+
+
+def _named_leaves(cfg):
+    """(path string, shape) for every param leaf of a config, via abstract
+    shapes only — lets the pure rule run against production axis sizes."""
+    params = jax.eval_shape(lambda k: tf.init_params(k, cfg),
+                            jax.random.key(0))
+    return [(_path_str(p), tuple(leaf.shape)) for p, leaf
+            in jax.tree_util.tree_leaves_with_path(params)]
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_partition_dims_rules_on_production_sizes(name):
+    """The pure rule at production axis sizes (model=16, expert=8), for
+    every arch in the registry: assigned dims always divide their axis;
+    MoE expert tensors put "expert" only on the expert dim and never
+    "model" on or before it; MLA down-projections keep the latent output
+    whole and up-projections shard heads, never the shared latent."""
+    cfg = get_config(name)
+    mesh = {"model": 16, "expert": 8}
+    for pname, shape in _named_leaves(cfg):
+        dims = partition_dims(pname, shape, model=16, expert=8)
+        assert len(dims) == len(shape)
+        for d, ax in zip(shape, dims):
+            if ax is not None:
+                assert d % mesh[ax] == 0 and d >= mesh[ax], (pname, shape)
+        nd = len(shape)
+        if len(shape) < 2:
+            assert dims == (None,) * nd
+            continue
+        if "experts" in pname.split("/"):
+            e = nd - 3
+            assert dims[e] in ("expert", None), (pname, dims)
+            assert "expert" not in dims[:e] + dims[e + 1:], (pname, dims)
+            assert "model" not in dims[:e + 1], (pname, dims)
+        leaf = pname.rsplit("/", 1)[-1]
+        if leaf in ("wq_a", "wkv_a"):
+            assert dims[-1] is None, (pname, dims)
+        if leaf in ("wq_b", "wk_b", "wv_b") and nd >= 3:
+            assert dims[nd - 3] is None, (pname, dims)
+            if shape[nd - 2] % 16 == 0 and shape[nd - 2] >= 16:
+                assert dims[nd - 2] == "model", (pname, dims)
+
+
+def test_partition_dims_expert_axis_absent_replicates_expert_dim():
+    """Without an "expert" mesh axis the expert dim replicates but the
+    per-expert matmul dims still shard on "model"."""
+    dims = partition_dims("layers/moe/experts/w_gate", (4, 60, 512, 256),
+                          model=16, expert=1)
+    assert dims == (None, None, "model", None)
+
+
+def test_partition_dims_attn_replicate_fallback():
+    """The "replicate" attention fallback still never shards head_dim, and
+    composes with the MLA head preference."""
+    dims = partition_dims("layers/attn/wq_b", (1536, 128, 192),
+                          model=16, attn_fallback="replicate")
+    assert dims == (None, "model", None)
+    # heads not divisible -> nothing shards (head_dim excluded by fallback)
+    dims = partition_dims("layers/attn/wq_b", (1536, 12, 192),
+                          model=16, attn_fallback="replicate")
+    assert dims == (None, None, None)
+
+
+def test_param_pspecs_uses_expert_axis_when_mesh_has_one():
+    """param_pspecs threads a mesh's expert axis size into the rule; on a
+    1-sized axis it degrades to replicate-expert-dim."""
+    cfg = smoke_config("deepseek-v2-236b")
+    params = jax.eval_shape(lambda k: tf.init_params(k, cfg),
+                            jax.random.key(0))
+    mesh = _mesh()          # 1x1 data/model mesh: everything replicates
+    specs = param_pspecs(params, mesh)
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params):
+        sub = specs
+        for k in path:
+            sub = sub[k.key] if hasattr(k, "key") else sub[k.idx]
+        assert tuple(sub.spec) in ((), tuple([None] * len(leaf.shape)))
 
 
 def test_hint_noop_outside_mesh():
