@@ -15,26 +15,43 @@ at zero LS load, conservative split under load). On top of this the
   * ``alloc_fail`` windows over the paged allocator;
   * ``page_corrupt`` points rotting cold pages between put and get.
 
-Four modes replay the identical submission set and storm schedule:
+Five modes replay the identical submission set and storm schedule:
 
   * ``clean``          — no faults: the reference streams and SLO;
   * ``storm_recovery`` — storm on, recovery on (watchdog, retry/backoff,
                          deadline shedding, checksummed cold pages,
-                         degradation ladders);
+                         degradation ladders), untraced;
+  * two *traced* ``storm_recovery`` replays — same seed, full telemetry
+    (``repro.obs.Tracer``) for the trace-determinism and SLO-attribution
+    checks;
   * ``storm_naive``    — same storm, ``fault_recovery=False``: no
-                         watchdog, blind swap retries, no shedding;
-  * two extra seeded ``storm_recovery`` replays for the determinism check.
+                         watchdog, blind swap retries, no shedding.
 
 Measured under the virtual token clock: LS SLO attainment over *all*
 submitted LS requests (an unfinished or shed LS request is a violation,
 not a dropped sample), BE goodput (completed tokens), injected /
 recovered / shed counters, and the watchdog trip count.
 
+The traced replays additionally export ``BENCH_chaos_trace.json``
+(Perfetto/Chrome ``trace_event`` JSON) and ``BENCH_chaos_events.jsonl``
+(canonical JSONL, schema-validatable via ``python -m repro.obs.schema``),
+and feed four telemetry gates:
+
+  * ``tokens_bitequal``        — traced LS token streams == untraced;
+  * ``trace_identical``        — two same-seed traced replays emit
+                                 byte-identical JSONL;
+  * ``trace_schema_valid``     — every event passes the closed-registry
+                                 schema check;
+  * ``violations_attributed``  — every LS SLO-violation window in the
+                                 ``SLOTimeline`` carries >= 1 attributed
+                                 cause event (fault/plan/recovery/swap).
+
 Headline ``summary.pass``: storm_recovery holds LS SLO >= 0.95 AND
 storm_naive measurably collapses (<= storm_recovery - 0.15 or below 0.8)
 AND two identically-seeded runs produce an identical injected-event log
-and identical LS token streams. ``--smoke`` shrinks the trace for CI;
-``--out PATH`` overrides the JSON path.
+and identical LS token streams AND all four telemetry gates hold.
+``--smoke`` shrinks the trace for CI; ``--out PATH`` overrides the JSON
+path.
 """
 from __future__ import annotations
 
@@ -43,6 +60,7 @@ import sys
 
 import numpy as np
 
+from repro import obs
 from repro.configs import smoke_config
 from repro.core.controller import OnlineController, PlanFrontier, ResourcePlan
 from repro.core.tenancy import TenantSpec
@@ -115,14 +133,15 @@ def _storm(n_bursts, period=200.0):
     return [e for e in evs if e.t >= 0.0]
 
 
-def _serve(cfg, params, trace, *, faults=None, recovery=True, horizon):
+def _serve(cfg, params, trace, *, faults=None, recovery=True, horizon,
+           tracer=None):
     state = {"t": 0.0}
     eng = ServingEngine(
         max_seq=MAX_SEQ, paged=True, page_size=PAGE, kv_pages=KV_PAGES,
         chunk_size=PAGE, grow_pages=True, swap=True, cold_dtype="fp16",
         slots_ls=4, slots_be=4, controller=_controller(),
         control_interval=2, faults=faults, fault_recovery=recovery,
-        now_fn=lambda: state["t"])
+        now_fn=lambda: state["t"], tracer=tracer)
     eng.add_tenant(TenantSpec("ls0", "LS"), cfg, params=params)
     eng.add_tenant(TenantSpec("be0", "BE"), cfg, params=params)
 
@@ -184,25 +203,53 @@ def run(smoke: bool = False, out_path: str = "BENCH_chaos.json") -> Rows:
 
     clean = _serve(cfg, params, trace, horizon=horizon)
     rec = _serve(cfg, params, trace, faults=mk_storm(), horizon=horizon)
-    rec2 = _serve(cfg, params, trace, faults=mk_storm(), horizon=horizon)
+    tr1, tr2 = obs.Tracer("info"), obs.Tracer("info")
+    rec_t1 = _serve(cfg, params, trace, faults=mk_storm(), horizon=horizon,
+                    tracer=tr1)
+    rec_t2 = _serve(cfg, params, trace, faults=mk_storm(), horizon=horizon,
+                    tracer=tr2)
     naive = _serve(cfg, params, trace, faults=mk_storm(), recovery=False,
                    horizon=horizon)
 
-    deterministic = (rec["_fault_log"] == rec2["_fault_log"]
-                     and rec["_ls_outputs"] == rec2["_ls_outputs"])
-    for m in (clean, rec, rec2, naive):
+    deterministic = (rec["_fault_log"] == rec_t1["_fault_log"]
+                     and rec["_ls_outputs"] == rec_t1["_ls_outputs"])
+    # telemetry gates (tentpole acceptance): tracing must be pure
+    # observation, byte-deterministic, schema-clean, and every violation
+    # window must carry an attributed cause
+    tokens_bitequal = rec["_ls_outputs"] == rec_t1["_ls_outputs"]
+    jl1, jl2 = tr1.jsonl(), tr2.jsonl()
+    trace_identical = bool(jl1) and jl1 == jl2
+    try:
+        obs.validate_events(tr1.events)
+        schema_valid = True
+    except obs.SchemaError:
+        schema_valid = False
+    tl = obs.SLOTimeline(tr1.events, window=50.0)
+    attributed = tl.all_violations_attributed()
+    trace_stats = tr1.stats()
+    for m in (clean, rec, rec_t1, rec_t2, naive):
         m.pop("_ls_outputs")
         m.pop("_fault_log")
 
     slo_on, slo_off = rec["ls_slo"], naive["ls_slo"]
     collapses = slo_off <= max(slo_on - 0.15, 0.0) or slo_off < 0.8
-    passed = bool(slo_on >= 0.95 and collapses and deterministic)
+    passed = bool(slo_on >= 0.95 and collapses and deterministic
+                  and tokens_bitequal and trace_identical and schema_valid
+                  and attributed)
+
+    base = out_path[:-5] if out_path.endswith(".json") else out_path
+    obs.write_perfetto(tr1.events, base + "_trace.json")
+    with open(base + "_events.jsonl", "w") as f:
+        f.write(jl1)
 
     for name, m in (("clean", clean), ("storm_recovery", rec),
                     ("storm_naive", naive)):
         rows.add(f"chaos/{name}", 0.0,
                  f"slo={m['ls_slo']:.3f};be_tok={m['be_goodput_tokens']};"
                  f"wd={m['watchdog_trips']}")
+    rows.add("chaos/trace", 0.0,
+             f"events={trace_stats['events']};dumps={trace_stats['dumps']};"
+             f"identical={trace_identical};attributed={attributed}")
     rows.add("chaos/summary", 0.0,
              f"pass={passed};deterministic={deterministic}")
 
@@ -212,12 +259,25 @@ def run(smoke: bool = False, out_path: str = "BENCH_chaos.json") -> Rows:
                      "be_per_period": be_per_period, "slo_ticks": SLO_TICKS,
                      "kv_pages": KV_PAGES},
         "modes": {"clean": clean, "storm_recovery": rec,
-                  "storm_recovery_replay": rec2, "storm_naive": naive},
+                  "storm_recovery_traced": rec_t1,
+                  "storm_recovery_traced_replay": rec_t2,
+                  "storm_naive": naive},
+        "trace": {
+            "events": trace_stats["events"],
+            "flight_recorder_dumps": trace_stats["dumps"],
+            "perfetto": base + "_trace.json",
+            "jsonl": base + "_events.jsonl",
+            "slo_timeline": tl.report(),
+        },
         "summary": {
             "ls_slo_recovery_on": slo_on,
             "ls_slo_recovery_off": slo_off,
             "recovery_off_collapses": bool(collapses),
             "deterministic_replay": bool(deterministic),
+            "tokens_bitequal": bool(tokens_bitequal),
+            "trace_identical": bool(trace_identical),
+            "trace_schema_valid": bool(schema_valid),
+            "violations_attributed": bool(attributed),
             "pass": passed,
         },
     }

@@ -37,6 +37,7 @@ import sys
 import numpy as np
 
 from repro.configs import get_config, smoke_config
+from repro.obs import percentile
 from repro.core.compute import ComputePolicy
 from repro.core.controller import ResourcePlan
 from repro.core.simulator import (GPU_DEVICES, GPUSimulator, Tenant,
@@ -89,7 +90,7 @@ def run_jax_mode(cfg, params, chunk, n_ls=3, n_be=3):
     assert m["ls0"]["completed"] == n_ls and m["be0"]["completed"] == n_be
     return {
         "chunk": chunk,
-        "ls_p99_tbt": float(np.percentile(gaps, 99)) if gaps else None,
+        "ls_p99_tbt": percentile(gaps, 99),
         "ls_mean_tbt": float(np.mean(gaps)) if gaps else None,
         "be_prefill_tokens": int(be_prefill),
         "total_ticks": float(total),
@@ -159,7 +160,7 @@ def run_sim(out, rows, chunks, horizon=4.0):
         res[key] = {
             "chunk": chunk,
             "ls_completed": len(ls.latencies),
-            "ls_p99_ms": float(np.percentile(lats, 99) * 1e3),
+            "ls_p99_ms": float(percentile(lats, 99) * 1e3),
             "ls_ttft_p99_ms": float(r.ls_ttft_p99() * 1e3),
             "ls_tbt_p99_ms": float(r.ls_tbt_p99() * 1e3),
             "be_completed": r.tenants[1].completed,

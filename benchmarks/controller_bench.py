@@ -34,6 +34,7 @@ import sys
 import numpy as np
 
 from repro.configs import get_config, smoke_config
+from repro.obs import percentile
 from repro.core.compute import ComputePolicy
 from repro.core.controller import (OnlineController, frontier_search,
                                    tidal_frontier)
@@ -110,7 +111,7 @@ def run_sim(out, rows, frontier, horizon):
         lats = np.asarray(ls.latencies) if ls.latencies else np.zeros(1)
         res[mode] = {
             "ls_completed": len(ls.latencies),
-            "ls_p99_ms": float(np.percentile(lats, 99) * 1e3),
+            "ls_p99_ms": float(percentile(lats, 99) * 1e3),
             "ls_slo_attainment": float(np.mean(lats <= LS_SLO_S)),
             "be_completed": r.tenants[1].completed,
             "be_throughput_rps": r.tenants[1].completed / r.horizon,

@@ -39,6 +39,7 @@ import sys
 import numpy as np
 
 from repro.configs import get_config, smoke_config
+from repro.obs import percentile
 from repro.core.compute import ComputePolicy
 from repro.core.interconnect import (Flow, InterconnectSim, Topology,
                                      ring_allgather_flows)
@@ -141,14 +142,15 @@ def _sim_disagg(cfg, dev, arrs):
     gaps = [x for tn in d_res.tenants for x in tn.tbt_gaps]
     xfer = {"flows": len(flows), "delivered": len(land),
             "bytes": int(kv_bytes) * len(flows),
-            "fct_p99_s": (float(np.percentile(
-                [c.fct for c in comps if c.flow.kind == "kv"], 99))
+            "fct_p99_s": (percentile(
+                [c.fct for c in comps if c.flow.kind == "kv"], 99)
                 if land else None)}
     return ttfts, gaps, xfer
 
 
 def _p99(xs):
-    return float(np.percentile(xs, 99)) if xs else float("nan")
+    p = percentile(xs, 99)
+    return float("nan") if p is None else p
 
 
 def _jax_layer(smoke):

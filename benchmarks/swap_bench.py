@@ -39,6 +39,7 @@ import sys
 import numpy as np
 
 from repro.configs import smoke_config
+from repro.obs import percentile
 from repro.core.tenancy import TenantSpec
 from repro.serving import ServingEngine
 
@@ -78,7 +79,7 @@ def _serve(cfg, params, prompts, *, kv_pages, grow, swap, cold="fp16"):
         "grow_stalls": rt.grow_stalls,
         "resume_events": len(gaps),
         "resume_mean": float(np.mean(gaps)) if gaps else None,
-        "resume_p99": float(np.percentile(gaps, 99)) if gaps else None,
+        "resume_p99": percentile(gaps, 99),
         "host": rt.host.stats() if rt.host is not None else None,
         "outputs": [r.output for r in reqs],
     }

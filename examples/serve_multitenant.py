@@ -6,11 +6,15 @@ backend) — both through the SAME ServingEngine API, with the offline
 controller's ResourcePlan threaded into each.
 
 Run:  PYTHONPATH=src python examples/serve_multitenant.py
+      (add --trace to attach the telemetry plane to the sgdrc+online run
+      and print its SLO-timeline violation-attribution table)
 """
 import json
+import sys
 
 import numpy as np
 
+from repro import obs
 from repro.configs import get_config, smoke_config
 from repro.core.controller import OnlineController, grid_search, tidal_frontier
 from repro.core.coloring import gpu_hash_model
@@ -38,12 +42,17 @@ for policy, coloring, online in [("temporal", False, False),
                                  ("sgdrc", True, False),
                                  ("sgdrc", True, True)]:
     ctrl = OnlineController(tidal_frontier(plan)) if online else None
+    # --trace: attach the telemetry plane to the sgdrc+online row and give
+    # the LS tenants an SLO so request:done events carry verdicts the
+    # SLOTimeline can score and attribute
+    tracer = obs.Tracer("info") if ("--trace" in sys.argv and online) else None
+    ls_slo = 15.0 if tracer is not None else None
     eng = ServingEngine(backend="sim", device="tpu-v5e", policy=policy,
                         coloring=coloring, plan=plan, controller=ctrl,
-                        control_dt=0.005)
-    eng.add_tenant(TenantSpec("ls0", "LS", batch_size=1),
+                        control_dt=0.005, tracer=tracer)
+    eng.add_tenant(TenantSpec("ls0", "LS", batch_size=1, slo_ms=ls_slo),
                    get_config("qwen3-1.7b"), sim_seq=128)
-    eng.add_tenant(TenantSpec("ls1", "LS", batch_size=1),
+    eng.add_tenant(TenantSpec("ls1", "LS", batch_size=1, slo_ms=ls_slo),
                    get_config("qwen3-1.7b"), sim_seq=128)
     eng.add_tenant(TenantSpec("be0", "BE", batch_size=8),
                    get_config("gemma2-9b"), closed_loop=True, sim_seq=256)
@@ -56,6 +65,12 @@ for policy, coloring, online in [("temporal", False, False),
         ("+online" if online else "")
     print(f"{tag:<22s} {res.ls_p99()*1e3:>12.1f} "
           f"{res.be_throughput(8):>18.1f}")
+    if tracer is not None:
+        tl = obs.SLOTimeline(tracer.events, window=HORIZON / 10)
+        print(f"\nSLO timeline ({tag}, {tracer.stats()['events']} events, "
+              f"LS SLO {ls_slo:.0f}ms): violation attribution")
+        print(tl.format_table())
+        print()
 
 # -- real execution at reduced scale (jax backend) ---------------------------
 # paged colored KV + radix-tree prefix cache: the repeated system prompt is

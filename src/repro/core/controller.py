@@ -291,12 +291,19 @@ class OnlineController:
         self.plan = frontier.entries[-1][1]   # start most conservative
         self.transitions: List[Tuple[float, ResourcePlan]] = []
         self._idle_windows = 0
+        #: cause of the most recent transition (telemetry; see
+        #: ``repro.obs.schema.PLAN_CAUSES``): "slo_guard" | "hysteresis" |
+        #: "lending" | "snap_back"; None while holding steady.
+        self.last_cause: Optional[str] = None
 
     def decide(self, sig: LoadSignal, t: float = 0.0) -> ResourcePlan:
+        self.last_cause = None
         load = sig.ls_load
+        guarded = False
         if load > 0 and sig.ls_slo_attainment is not None \
                 and sig.ls_slo_attainment < self.slo_guard:
             load = 1.0          # SLO pressure: treat as saturated
+            guarded = True
         if load <= 0:
             self._idle_windows += 1
             if self._idle_windows < self.idle_patience:
@@ -311,7 +318,11 @@ class OnlineController:
             if i_tgt < i_cur:
                 # relaxing toward BE generosity: one regime per decision
                 target = self.frontier.entries[i_cur - 1][1]
-            # tightening: jump straight to the target (bounded snap-back)
+                self.last_cause = ("lending" if self.frontier.index_of(
+                    target) == 0 else "hysteresis")
+            else:
+                # tightening: jump straight to target (bounded snap-back)
+                self.last_cause = "slo_guard" if guarded else "snap_back"
             self.plan = target
             self.transitions.append((t, target))
         return self.plan
@@ -329,17 +340,20 @@ class PlanSchedule:
         self.points = sorted(self.points, key=lambda e: e[0])
         self.transitions: List[Tuple[float, ResourcePlan]] = []
         self._current = self.points[0][1]
+        self.last_cause: Optional[str] = None
 
     @property
     def plan(self) -> ResourcePlan:
         return self.points[0][1]
 
     def decide(self, sig: LoadSignal, t: float = 0.0) -> ResourcePlan:
+        self.last_cause = None
         out = self.points[0][1]
         for t0, plan in self.points:
             if t0 <= t + 1e-12:
                 out = plan
         if out is not self._current:
             self._current = out
+            self.last_cause = "schedule"
             self.transitions.append((t, out))
         return out

@@ -158,6 +158,20 @@ class FlowCompletion:
         """Flow completion time (submit -> last byte at destination)."""
         return self.t_end - self.flow.t_submit
 
+    def to_event(self) -> dict:
+        """Canonical ``kind="flow"`` telemetry event (see repro.obs.schema):
+        one instant per completed flow on the wire track, carrying the full
+        lifetime so exporters can render it as a complete slice."""
+        f = self.flow
+        return {"t": float(self.t_start), "ph": "I", "kind": "flow",
+                "name": f"f{f.fid}", "track": f"wire/{f.src}->{f.dst}",
+                "args": {"src": f.src, "dst": f.dst, "bytes": int(f.size),
+                         "tenant": f.tenant, "priority": f.priority,
+                         "kind": f.kind, "t_submit": float(f.t_submit),
+                         "t_start": float(self.t_start),
+                         "t_end": float(self.t_end), "hops": int(self.hops),
+                         "fct": float(self.fct)}}
+
 
 @dataclass
 class _Job:

@@ -12,6 +12,8 @@ from typing import List
 
 import numpy as np
 
+from ...obs.metrics import percentile as _pctl
+
 KIB = 1024
 PACKET = 1 * KIB
 
@@ -81,7 +83,8 @@ def summarize(completions: List[Completion]):
     """(LS p99 latency seconds, BE throughput bytes/s, per-tenant dict)."""
     ls_lat = [c.latency for c in completions if c.req.priority == "LS"]
     be = [c for c in completions if c.req.priority == "BE"]
-    p99 = float(np.percentile(ls_lat, 99)) if ls_lat else float("nan")
+    p99 = _pctl(ls_lat, 99)
+    p99 = float("nan") if p99 is None else p99
     if be:
         t_end = max(c.t_done for c in be)
         thpt = sum(c.req.size for c in be) / max(t_end, 1e-9)
@@ -90,5 +93,4 @@ def summarize(completions: List[Completion]):
     per_tenant = {}
     for c in completions:
         per_tenant.setdefault(c.req.tenant, []).append(c.latency)
-    return p99, thpt, {k: float(np.percentile(v, 99))
-                       for k, v in per_tenant.items()}
+    return p99, thpt, {k: _pctl(v, 99) for k, v in per_tenant.items()}

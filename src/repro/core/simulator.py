@@ -20,6 +20,7 @@ import numpy as np
 from .compute import ComputePolicy
 from .costmodel import model_costs
 from ..configs.base import ModelConfig
+from ..obs.metrics import percentile as _pctl
 
 
 @dataclass(frozen=True)
@@ -127,8 +128,17 @@ class GPUSimulator:
                  coloring: bool = False, ch_be: float = 1 / 3,
                  spt_overhead: float = 0.007, pcie_coupled=None,
                  controller=None, control_dt: float = 0.02,
-                 migration_bytes: float = 0.0, faults=None):
+                 migration_bytes: float = 0.0, faults=None, tracer=None):
         self.dev = dev
+        # telemetry (repro.obs.Tracer): plan adoptions emit kind="plan"
+        # instants with the controller's cause; kernel completions emit
+        # kind="kernel" instants (debug level). Timestamps are simulated
+        # seconds — the sim never reads a wall clock.
+        self.tracer = tracer
+        self._last_plan = None
+        if tracer is not None and faults is not None \
+                and getattr(faults, "tracer", None) is None:
+            faults.tracer = tracer
         self.policy = policy
         self.coloring = coloring
         self.ch_be = ch_be
@@ -281,6 +291,14 @@ class GPUSimulator:
                                                  if tn.is_ls)),
                              window_s=self.control_dt)
             plan = self.controller.decide(sig, now)
+            if self.tracer is not None and plan is not self._last_plan:
+                cause = getattr(self.controller, "last_cause", None)
+                if cause is None:
+                    cause = "initial" if self._last_plan is None else "replan"
+                self.tracer.instant("plan", cause, now, "sim/plan",
+                                    sm_be=float(plan.sm_be),
+                                    ch_be=float(plan.ch_be))
+                self._last_plan = plan
             self.policy.update(sm_be=plan.sm_be)
             if plan.ch_be != self.ch_be and self.migration_bytes > 0:
                 moved = self.migration_bytes * abs(plan.ch_be - self.ch_be)
@@ -336,6 +354,12 @@ class GPUSimulator:
                 if tn.cur_remaining <= 1e-9:
                     tn.k_idx += 1
                     tn.cur_remaining = 1.0
+                    if self.tracer is not None \
+                            and self.tracer.enabled("kernel"):
+                        self.tracer.instant(
+                            "kernel", f"k{tn.k_idx - 1}", t,
+                            f"sim/{tn.name}", tenant=tn.name,
+                            k_idx=tn.k_idx - 1)
                     # phase marks: prefill-phase completion is the request's
                     # TTFT; decode-kernel completion gaps are its TBT
                     if tn.prefill_kernels is not None:
@@ -373,11 +397,11 @@ class SimResult:
 
     def ls_p99(self) -> float:
         lat = [l for tn in self.tenants if tn.is_ls for l in tn.latencies]
-        return float(np.percentile(lat, 99)) if lat else float("nan")
+        return float(_pctl(lat, 99)) if lat else float("nan")
 
     def ls_p99_of(self, name) -> float:
         tn = next(x for x in self.tenants if x.name == name)
-        return (float(np.percentile(tn.latencies, 99))
+        return (float(_pctl(tn.latencies, 99))
                 if tn.latencies else float("nan"))
 
     def be_throughput(self, batch: int = 1) -> float:
@@ -388,14 +412,14 @@ class SimResult:
         """p99 prefill-phase completion time over LS tenants carrying a
         ``prefill_kernels`` phase mark (NaN without samples)."""
         ts = [x for tn in self.tenants if tn.is_ls for x in tn.ttfts]
-        return float(np.percentile(ts, 99)) if ts else float("nan")
+        return float(_pctl(ts, 99)) if ts else float("nan")
 
     def ls_tbt_p99(self) -> float:
         """p99 decode inter-kernel gap over LS tenants (NaN without
         samples) — the simulator-side TBT the chunked BE prefill is meant
         to protect."""
         gs = [x for tn in self.tenants if tn.is_ls for x in tn.tbt_gaps]
-        return float(np.percentile(gs, 99)) if gs else float("nan")
+        return float(_pctl(gs, 99)) if gs else float("nan")
 
 
 # ---------------------------------------------------------------------------

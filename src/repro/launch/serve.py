@@ -116,6 +116,19 @@ def main():
     ap.add_argument("--max-queue", type=int, default=4096,
                     help="per-tenant submit backpressure bound (excess "
                          "requests are rejected, not queued)")
+    ap.add_argument("--trace", default=None, metavar="OUT",
+                    help="telemetry plane (repro.obs): record structured "
+                         "trace events on the engine's virtual clock and "
+                         "write a Chrome/Perfetto trace_event JSON to OUT "
+                         "(plus a canonical JSONL stream next to it at "
+                         "OUT + '.jsonl'); prints the SLO timeline when "
+                         "any tenant carries an SLO")
+    ap.add_argument("--trace-level", default="info",
+                    choices=["coarse", "info", "debug"],
+                    help="trace verbosity: coarse = control plane only "
+                         "(plans/faults/violations), info = + request "
+                         "phases/quanta/swaps/flows, debug = + per-chunk "
+                         "and per-kernel events")
     args = ap.parse_args()
 
     from ..configs import get_config, smoke_config
@@ -125,6 +138,21 @@ def main():
     from ..core.simulator import GPU_DEVICES
     from ..core.tenancy import TenantSpec
     from ..serving import FaultPlane, ServingEngine
+
+    tracer = None
+    if args.trace:
+        from .. import obs
+        tracer = obs.Tracer(args.trace_level)
+
+    def _export_trace(events):
+        from ..obs import SLOTimeline, write_jsonl, write_perfetto
+        write_perfetto(events, args.trace)
+        write_jsonl(events, args.trace + ".jsonl")
+        print(f"trace: {len(events)} events -> {args.trace} "
+              f"(+.jsonl); flight-recorder dumps: {len(tracer.dumps)}")
+        tl = SLOTimeline(events)
+        if tl.dones:
+            print(tl.format_table())
 
     faults = None
     now_fn = None
@@ -181,7 +209,8 @@ def main():
             n_devices=args.devices, n_prefill=args.prefill_devices,
             pipeline=not args.no_pipeline,
             control_interval=args.control_interval,
-            use_flash=args.use_flash, prefix_cache=args.prefix_cache)
+            use_flash=args.use_flash, prefix_cache=args.prefix_cache,
+            tracer=tracer)
         names = []
         for name in args.ls:
             cfg = smoke_config(name).replace(activation_dtype="float32")
@@ -194,6 +223,8 @@ def main():
                            max_new=args.max_new)
         dis.run_until_idle()
         print(json.dumps(dis.metrics(), indent=1))
+        if tracer is not None:
+            _export_trace(tracer.events)
         return
 
     grow = args.grow_pages or args.swap
@@ -210,7 +241,7 @@ def main():
         controller=ctrl, control_interval=args.control_interval,
         faults=faults, fault_recovery=not args.no_fault_recovery,
         fault_budget=args.fault_budget, max_queue=args.max_queue,
-        now_fn=now_fn,
+        now_fn=now_fn, tracer=tracer,
         hash_model=gpu_hash_model(args.gpu)
         if args.coloring and args.backend == "jax" else None)
     rng = np.random.default_rng(0)
@@ -251,6 +282,8 @@ def main():
     print(json.dumps(eng.metrics(), indent=1))
     print(f"engine quanta executed: {steps}" if args.backend == "jax"
           else f"requests completed in sim: {steps}")
+    if tracer is not None:
+        _export_trace(tracer.events)
 
 
 if __name__ == "__main__":

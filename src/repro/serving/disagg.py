@@ -105,9 +105,13 @@ class DisaggregatedEngine:
                  quantum_dt: float = 1e-3,
                  background_flows: Optional[List[Flow]] = None,
                  use_flash: bool = False, prefix_cache: bool = False,
-                 seed: int = 0):
+                 seed: int = 0, tracer=None):
         assert n_devices >= 2, "disaggregation needs >= 2 devices"
         assert 1 <= n_prefill < n_devices
+        # one shared tracer across both slices on the shared virtual clock:
+        # tracks are namespaced "prefill/..." / "decode/...", lending and
+        # wire-flow events land on their own tracks
+        self.tracer = tracer
         self._t = 0.0
         self._dt = float(quantum_dt)
         self.devices = [f"dev{i}" for i in range(n_devices)]
@@ -123,7 +127,7 @@ class DisaggregatedEngine:
             chunk_size=chunk_size, token_budget=token_budget,
             kv_pages=kv_pages, slots_ls=slots_prefill, slots_be=slots_prefill,
             grow_pages=True, prefix_cache=prefix_cache, use_flash=use_flash,
-            now_fn=clock, seed=seed)
+            now_fn=clock, seed=seed, tracer=tracer, trace_name="prefill")
         # decode slice: swap tier on (its SWAPPED re-admission path is the
         # migration restore path; its HostSwapPool is the wire buffer) with
         # fp16 passthrough so transferred KV is bit-exact, and page growth
@@ -133,7 +137,8 @@ class DisaggregatedEngine:
             chunk_size=chunk_size, token_budget=token_budget,
             kv_pages=kv_pages, slots_ls=slots_decode, slots_be=slots_decode,
             swap=True, grow_pages=True, cold_dtype="fp16",
-            use_flash=use_flash, now_fn=clock, seed=seed)
+            use_flash=use_flash, now_fn=clock, seed=seed, tracer=tracer,
+            trace_name="decode")
         self.prefill.migrate_hook = self._migrate
         self.pipeline = bool(pipeline)
         if self.pipeline:
@@ -328,6 +333,11 @@ class DisaggregatedEngine:
                                  "ls_load": sig.ls_load,
                                  "prefill_devices": assign["LS"],
                                  "decode_devices": assign["BE"]})
+        if self.tracer is not None:
+            self.tracer.instant("lending", "rebalance", self._t, "lending",
+                                round=self.rounds, ls_load=sig.ls_load,
+                                prefill_devices=assign["LS"],
+                                decode_devices=assign["BE"])
 
     @staticmethod
     def _has_work(eng: ServingEngine) -> bool:
@@ -385,7 +395,21 @@ class DisaggregatedEngine:
                       for st in pend)
             self._t = max(self._t, nxt)
             self._pump()
+        self._flush_flow_trace()
         return n
+
+    def _flush_flow_trace(self):
+        """Emit one kind="flow" event per wire flow from the *final*
+        interconnect replay (the flow set is replayed whole on every
+        mutation, so intermediate completions would duplicate fids; the
+        last completion per fid is the authoritative lifetime)."""
+        if self.tracer is None:
+            return
+        by_fid = {}
+        for c in self.flow_log:
+            by_fid[c.flow.fid] = c
+        for fid in sorted(by_fid):
+            self.tracer.emit_raw(by_fid[fid].to_event())
 
     # -- results -------------------------------------------------------
     def outputs(self, tenant: str) -> List[List[int]]:

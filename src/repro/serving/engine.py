@@ -96,11 +96,12 @@ from ..configs.base import ModelConfig
 from ..core.compute import ComputePolicy
 from ..core.coloring.allocator import (ColoredArena, OutOfColoredMemory,
                                        split_channels)
-from ..core.controller import ResourcePlan
+from ..core.controller import ResourcePlan, measured_prefix_hit
 from ..core.simulator import (GPU_DEVICES, GPUSimulator, Kernel, Tenant,
                               request_kernels)
 from ..core.tenancy import TenantSpec
 from ..models import transformer as tf
+from .. import obs
 from .faults import ColdPageCorrupt, FaultPlane, HostTierFault, safe_floor
 from .kv_cache import PagedKVCache, kv_bytes_per_token
 from .prefix_cache import PrefixCache
@@ -321,6 +322,9 @@ class _JaxBackend:
                                        nice=rt.spec.nice,
                                        faults=eng.faults,
                                        verify=eng.fault_recovery)
+                if eng.tracer.level >= 0:
+                    rt.host.tracer = eng.tracer
+                    rt.host.trace_prefix = eng._trace_prefix
                 if rt.prefix is not None:
                     # cold prefix tier: evicted leaves' pages survive on the
                     # host and fault back in before a matching admission
@@ -344,9 +348,12 @@ class _JaxBackend:
     # -- step-boundary admission / eviction ------------------------------
     def _finish(self, rt: _TenantRT, slot: int):
         req = rt.active[slot]
-        req.t_done = self.engine.clock()
+        eng = self.engine
+        eng._trace_leave(rt, req, slot, req.phase.name.lower(), "finished")
+        req.t_done = eng.clock()
         req.phase = Phase.FINISHED
         rt.done.append(req)
+        eng._trace_done(rt, req)
         rt.active[slot] = None
         pos = int(rt.pos[slot])
         rt.pos[slot] = 0
@@ -383,6 +390,9 @@ class _JaxBackend:
         rt.fault_recoveries[kind] = rt.fault_recoveries.get(kind, 0) + 1
         rt.fault_score += 1
         eng = self.engine
+        eng.tracer.instant("recovery", kind, eng.clock(),
+                           f"{eng._trace_prefix}recovery",
+                           tenant=rt.spec.name, score=rt.fault_score)
         while rt.fault_score >= eng.fault_budget * (len(rt.degraded) + 1):
             if rt.flash:
                 rt.flash = False
@@ -402,8 +412,13 @@ class _JaxBackend:
         pages freed without donation, host-tier pages dropped, and the
         request finishes failed+shed — recovery trades one BE request for
         the batch's forward progress instead of stalling everyone."""
+        eng = self.engine
+        eng.tracer.instant("recovery", reason, eng.clock(),
+                           f"{eng._trace_prefix}recovery",
+                           tenant=rt.spec.name, rid=req.rid)
         if req.slot is not None:
             s = req.slot
+            eng._trace_leave(rt, req, s, req.phase.name.lower(), reason)
             self._drop_slot_pages(rt, s)
             rt.active[s] = None
             rt.pos[s] = 0
@@ -423,6 +438,7 @@ class _JaxBackend:
             req.output = []
         rt.shed += 1
         rt.done.append(req)
+        eng._trace_done(rt, req)
 
     def _youngest_victim(self, rt: _TenantRT, exclude: int,
                          younger_than: Optional[Request] = None
@@ -451,6 +467,8 @@ class _JaxBackend:
         back to WAITING, re-queued. Deterministic greedy decode makes the
         restart emit identical tokens."""
         s = req.slot
+        self.engine._trace_leave(rt, req, s, req.phase.name.lower(),
+                                 "preempt")
         self._drop_slot_pages(rt, s)
         rt.active[s] = None
         rt.pos[s] = 0
@@ -499,6 +517,7 @@ class _JaxBackend:
             # swap-in records exactly one resume gap
             rt.resume_gaps.append(now - req.t_evicted)
         req.t_evicted = now
+        eng._trace_leave(rt, req, s, req.phase.name.lower(), "swap_out")
         req.phase = Phase.SWAPPED
         req.slot = None
         self._drop_slot_pages(rt, s)
@@ -660,6 +679,7 @@ class _JaxBackend:
             if req.swap_cursor >= len(req.swap_keys):
                 rt.pos[s] = req.resume_pos
                 rt.last_tok[s] = req.resume_tok
+                eng._trace_phase(rt, req, "swapping", "decoding")
                 req.phase = Phase.DECODING
                 req.swap_keys = None
                 req.swap_retries = 0
@@ -690,6 +710,7 @@ class _JaxBackend:
         if req.t_evicted is not None:       # preempt-restart warm TTFT
             rt.resume_gaps.append(now - req.t_evicted)
             req.t_evicted = None
+        eng._trace_phase(rt, req, req.phase.name.lower(), "decoding")
         req.phase = Phase.DECODING
         req.output = [int(first_tok)]
         rt.pos[s] = L
@@ -703,6 +724,7 @@ class _JaxBackend:
             # the hook serialized the page group, so only free the slot
             # (the prefix donation above already happened — no double
             # donation, and no local decode step runs for this request)
+            eng._trace_leave(rt, req, s, "decoding", "migrated")
             self._drop_slot_pages(rt, s)
             rt.active[s] = None
             rt.pos[s] = 0
@@ -739,6 +761,7 @@ class _JaxBackend:
         ignored). A chunk write landing in a shared page forks it
         copy-on-write first; a chunk that reaches the end of its prompt
         seeds the request's first output token. Returns tokens computed."""
+        eng = self.engine
         kv = rt.kv
         by_slot: Dict[int, list] = {}
         for c in chunks:
@@ -772,6 +795,13 @@ class _JaxBackend:
                         rt.params, jnp.asarray(toks), rt.cache,
                         jnp.asarray(pos))
                 rt.prefill_computed += Sq * len(group)
+                if eng.tracer.enabled("chunk"):
+                    t_c = eng.clock()
+                    for c in group:
+                        eng.tracer.instant(
+                            "chunk", f"c{c.start}", t_c,
+                            eng._tr_track(rt, c.slot), rid=c.req.rid,
+                            start=c.start, len=Sq)
                 tokens += Sq * len(group)
                 done = [c for c in group
                         if c.start + Sq >= len(c.req.tokens)]
@@ -827,6 +857,9 @@ class _JaxBackend:
             rt.last_tok[s] = tok
             if req.t_last is not None:
                 rt.tbt_gaps.append(now - req.t_last)
+                if rt.spec.is_ls:
+                    eng.registry.histogram("ls_tbt_all_ms").record(
+                        (now - req.t_last) * 1e3)
             req.t_last = now
             if req.t_evicted is not None:   # first token after a swap-in
                 rt.resume_gaps.append(now - req.t_evicted)
@@ -878,6 +911,17 @@ class _JaxBackend:
                           or shed_now)
         if progressed:
             eng.quantum_log.append(report)
+            tr = eng.tracer
+            if tr.enabled("quantum"):
+                tr.instant(
+                    "quantum", rt.spec.priority, eng.clock(),
+                    f"{eng._trace_prefix}quanta/{rt.spec.name}",
+                    tenant=rt.spec.name, step=eng._step_idx,
+                    decode_tokens=report.decode_tokens,
+                    prefill_tokens=report.prefill_tokens,
+                    budget=report.budget,
+                    swap_in_pages=report.swap_in_pages,
+                    swap_out_pages=report.swap_out_pages)
         return progressed
 
     def run_until_idle(self, max_steps: int = 100_000, horizon=None) -> int:
@@ -997,7 +1041,9 @@ class _SimBackend:
                            ch_be=eng.ch_be, controller=eng.controller,
                            control_dt=eng.control_dt,
                            migration_bytes=eng.migration_bytes,
-                           faults=eng.faults)
+                           faults=eng.faults,
+                           tracer=(eng.tracer if eng.tracer.level >= 0
+                                   else None))
         res = sim.run([tn for _, _, tn in built], horizon)
         eng.migrated_bytes += sim.migrated_bytes
         total = 0
@@ -1011,6 +1057,7 @@ class _SimBackend:
                 req.output = []
                 rt.done.append(req)
                 rt.queue.remove(req)
+                eng._trace_done(rt, req)
                 total += 1
         self.result = res
         eng.sim_result = res
@@ -1110,8 +1157,18 @@ class ServingEngine:
                  max_queue: int = 4096, swap_retry_limit: int = 3,
                  deadlock_patience: int = 8,
                  watchdog_quanta: Optional[int] = None,
-                 safe_plan: Optional[ResourcePlan] = None):
+                 safe_plan: Optional[ResourcePlan] = None,
+                 tracer=None, trace_name: str = ""):
         self.max_seq = max_seq
+        # telemetry plane (repro.obs): the engine always owns a tracer so
+        # emission sites stay branch-free; the default level-"off" tracer
+        # drops everything, which is what keeps untraced runs trivially
+        # bit-equal to traced ones (tracing is pure observation). All
+        # timestamps come from self.clock — never wall time directly.
+        self.tracer = tracer if tracer is not None else obs.Tracer("off",
+                                                                   ring=1)
+        self._trace_prefix = f"{trace_name}/" if trace_name else ""
+        self.registry = obs.MetricsRegistry()
         self.paged = paged
         self.page_size = page_size
         self.kv_pages = kv_pages
@@ -1189,6 +1246,8 @@ class ServingEngine:
         # defaults to 4 control intervals when a controller rides next to
         # a fault plane and stays off otherwise.
         self.faults = faults
+        if faults is not None and tracer is not None:
+            faults.tracer = self.tracer
         self.fault_recovery = fault_recovery
         self.fault_budget = max(int(fault_budget), 1)
         self.max_queue = max(int(max_queue), 1)
@@ -1320,9 +1379,82 @@ class ServingEngine:
             req.output = []
             rt.rejected += 1
             rt.done.append(req)
+            self._trace_done(rt, req)
             return req
         rt.queue.append(req)
+        self.tracer.instant("request", "submit", t,
+                            f"{self._trace_prefix}slo", rid=req.rid,
+                            tenant=tenant, prompt_len=int(toks.size),
+                            max_new=int(max_new))
         return req
+
+    # -- telemetry plane (repro.obs) ------------------------------------
+    # Per-slot tracks give LIFO B/E nesting (request span wraps phase
+    # spans); instants land on shared class tracks. All guarded by the
+    # tracer's level so the "off" default costs one comparison per seam.
+    def _tr_track(self, rt, slot) -> str:
+        return f"{self._trace_prefix}{rt.spec.name}/slot{slot}"
+
+    def _trace_enter(self, rt, req, phase_name: str):
+        """Request admitted to a slot: open request + first phase spans."""
+        tr = self.tracer
+        if not tr.enabled("phase"):
+            return
+        t, track = self.clock(), self._tr_track(rt, req.slot)
+        tr.begin("request", f"r{req.rid}", t, track, rid=req.rid,
+                 tenant=rt.spec.name)
+        tr.begin("phase", phase_name, t, track, rid=req.rid)
+
+    def _trace_phase(self, rt, req, old: str, new: str):
+        tr = self.tracer
+        if not tr.enabled("phase"):
+            return
+        t, track = self.clock(), self._tr_track(rt, req.slot)
+        tr.end("phase", old, t, track, rid=req.rid)
+        tr.begin("phase", new, t, track, rid=req.rid)
+
+    def _trace_leave(self, rt, req, slot, phase_name: str, outcome: str):
+        """Request leaves its slot (finish/preempt/swap-out/shed/migrate):
+        close the open phase and request spans."""
+        tr = self.tracer
+        if not tr.enabled("phase") or slot is None:
+            return
+        t, track = self.clock(), self._tr_track(rt, slot)
+        tr.end("phase", phase_name, t, track, rid=req.rid)
+        tr.end("request", f"r{req.rid}", t, track, rid=req.rid,
+               outcome=outcome)
+
+    def _trace_done(self, rt, req):
+        """Terminal accounting instant with the SLO verdict: ``ok`` is
+        True/False against ``spec.slo_ms`` (milliseconds) or, failing that,
+        the request's own ``deadline`` (clock units); None when the request
+        carries no SLO at all. Violations additionally emit a
+        ``violation`` instant — the SLOTimeline's attribution anchor."""
+        tr = self.tracer
+        if not tr.enabled("request"):
+            return
+        t = req.t_done if req.t_done is not None else self.clock()
+        lat = req.latency
+        slo = rt.spec.slo_ms
+        has_slo = slo is not None or req.deadline is not None
+        if req.failed:
+            ok = False if has_slo else None
+        elif slo is not None and lat is not None:
+            ok = bool(lat * 1e3 <= slo)
+        elif req.deadline is not None:
+            ok = bool(t <= req.deadline)
+        else:
+            ok = None
+        lat_ms = lat * 1e3 if lat is not None else None
+        track = f"{self._trace_prefix}slo"
+        tr.instant("request", "done", t, track, rid=req.rid,
+                   tenant=rt.spec.name, cls=rt.spec.priority, ok=ok,
+                   latency_ms=lat_ms, t_submit=req.t_submit,
+                   shed=req.shed, rejected=req.rejected)
+        if ok is False:
+            tr.instant("violation", "slo", t, track, rid=req.rid,
+                       tenant=rt.spec.name, latency_ms=lat_ms,
+                       t_submit=req.t_submit)
 
     # -- online control plane ------------------------------------------
     def _load_signal(self):
@@ -1352,13 +1484,27 @@ class ServingEngine:
                 if rt.spec.slo_ms is not None:
                     slo_n += 1
                     slo_ok += r.latency * 1e3 <= rt.spec.slo_ms
-        return LoadSignal(ls_queued=q, ls_active=a, ls_slots=max(slots, 1),
-                          ls_slo_attainment=(slo_ok / slo_n) if slo_n
-                          else None,
-                          ls_ttft_p99_ms=(float(np.percentile(ttfts, 99)
-                                                * 1e3) if ttfts else None),
-                          ls_tbt_p99_ms=(float(np.percentile(gaps, 99)
-                                               * 1e3) if gaps else None))
+        # the window's samples flow through the registry's histograms and
+        # the p99s are read back out of them (nearest-rank over log-linear
+        # buckets, see repro.obs.metrics), so the controller consumes the
+        # same numbers metrics() reports instead of a parallel computation
+        reg = self.registry
+        h_ttft = reg.histogram("ls_ttft_ms")
+        h_tbt = reg.histogram("ls_tbt_ms")
+        for v in ttfts:
+            h_ttft.record(v * 1e3)
+        for v in gaps:
+            h_tbt.record(v * 1e3)
+        if slo_n:
+            reg.gauge("ls_slo_attainment").set(slo_ok / slo_n)
+        sig = LoadSignal(ls_queued=q, ls_active=a, ls_slots=max(slots, 1),
+                         ls_slo_attainment=(slo_ok / slo_n) if slo_n
+                         else None,
+                         ls_ttft_p99_ms=h_ttft.percentile(99, window=True),
+                         ls_tbt_p99_ms=h_tbt.percentile(99, window=True))
+        reg.gauge("ls_load").set(sig.ls_load)
+        reg.tick()   # close the control window
+        return sig
 
     def _maybe_control(self):
         """Consult the controller at the quantum boundary: every
@@ -1382,6 +1528,19 @@ class ServingEngine:
             self.missed_ticks += 1
             return
         sig = self._load_signal()
+        # live prefix-hit feedback as a windowed gauge: the timeline can
+        # show hit-rate against plan transitions (re-planning from it is
+        # still future work — see ROADMAP "Telemetry & attribution")
+        hit = measured_prefix_hit(self)
+        self.registry.gauge("measured_prefix_hit").set(hit)
+        tr = self.tracer
+        if tr.enabled("gauge"):
+            sig_track = f"{self._trace_prefix}signals"
+            tr.counter("ls_load", now, sig.ls_load, track=sig_track)
+            if sig.ls_slo_attainment is not None:
+                tr.counter("ls_slo_attainment", now, sig.ls_slo_attainment,
+                           track=sig_track)
+            tr.counter("measured_prefix_hit", now, hit, track=sig_track)
         if (self.faults is not None
                 and self.faults.active("ctl_stale_signal", now) is not None):
             # stale telemetry: the controller decides on the last healthy
@@ -1393,7 +1552,10 @@ class ServingEngine:
             self._stale_sig = sig
         plan = self.controller.decide(sig, t=float(self._step_idx))
         if plan is not self._applied_plan:
-            self.apply_plan(plan)
+            cause = getattr(self.controller, "last_cause", None)
+            if cause is None:
+                cause = "initial" if self._applied_plan is None else "replan"
+            self.apply_plan(plan, cause=cause)
         elif self.arena is not None:
             # drain leftover off-color pages from an earlier partial
             # migration (BE groups still borrowing LS channels) — but never
@@ -1425,7 +1587,7 @@ class ServingEngine:
             return self.ls_ch, tuple(range(C))
         return split_channels(C, ch_be)
 
-    def apply_plan(self, plan: ResourcePlan):
+    def apply_plan(self, plan: ResourcePlan, cause: str = "replan"):
         """Adopt a ResourcePlan at a step boundary: the BE quantum share
         moves immediately; a ``ch_be`` move resplits the arena (off-color
         pages migrate to the new sets) and recolors every KV page pool so
@@ -1474,7 +1636,13 @@ class ServingEngine:
                                  "bytes_moved": int(
                                      moved * (self.arena.granularity
                                               if self.arena else 0)),
-                                 "pinned_groups": len(pinned)})
+                                 "pinned_groups": len(pinned),
+                                 "cause": cause})
+        self.tracer.instant("plan", cause, self.clock(),
+                            f"{self._trace_prefix}plan",
+                            sm_be=float(plan.sm_be),
+                            ch_be=float(plan.ch_be),
+                            pages_moved=int(moved), step=self._step_idx)
 
     def _safe_plan(self) -> Optional[ResourcePlan]:
         """The conservative plan the watchdog snaps to: an explicit
@@ -1511,9 +1679,12 @@ class ServingEngine:
             # already at (or below) the safe share: nothing to snap; re-arm
             self._last_ls_step = self._step_idx
             return
-        self.apply_plan(safe)
+        self.apply_plan(safe, cause="watchdog")
         self.transitions[-1]["watchdog"] = True
         self.watchdog_trips += 1
+        self.tracer.instant("recovery", "watchdog", self.clock(),
+                            f"{self._trace_prefix}recovery",
+                            step=self._step_idx)
         self._last_ls_step = self._step_idx
 
     # ------------------------------------------------------------------
@@ -1625,13 +1796,10 @@ class ServingEngine:
     @staticmethod
     def _pcts(vals, keys=("p50", "p99")):
         """{p50_ms, p99_ms} (or TTFT/TBT-prefixed variants) for a latency
-        list in seconds; None entries when the list is empty."""
-        out = {}
-        for k in keys:
-            q = float(k[1:])
-            out[f"{k}_ms"] = (float(np.percentile(vals, q) * 1e3)
-                              if vals else None)
-        return out
+        list in seconds; None entries when the list is empty. Nearest-rank
+        (repro.obs.metrics): the interpolated p99 np.percentile reports on
+        small samples is a value no request actually experienced."""
+        return obs.pcts(vals, {k: float(k[1:]) for k in keys}, scale=1e3)
 
     def metrics(self):
         out = {}
@@ -1754,4 +1922,12 @@ class ServingEngine:
                 or fa["rejected"] or fa["grow_deadlocks"] \
                 or fa["swap_retries"] or fa["watchdog_trips"]:
             out["faults"] = fa
+        # telemetry-plane rollup: the same windowed registry the control
+        # loop reads (LoadSignal p99s come out of these histograms), plus
+        # tracer volume when tracing is on
+        if (self.registry.ticks or self.registry.histograms
+                or self.registry.gauges):
+            out["_registry"] = self.registry.snapshot()
+        if self.tracer.level >= 0:
+            out["_trace"] = self.tracer.stats()
         return out

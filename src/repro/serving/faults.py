@@ -175,6 +175,9 @@ class FaultPlane:
         self._seen: set = set()          # event ids already logged
         self._consumed: set = set()      # point-event ids already fired
         self._counts: Dict[str, int] = {}
+        #: optional obs.Tracer; injections emit kind="fault" instants at
+        #: observation time (same determinism contract as ``log``)
+        self.tracer = None
 
     # -- scenario construction -----------------------------------------
     @classmethod
@@ -213,6 +216,11 @@ class FaultPlane:
             self.log.append({"t_obs": float(t), "t": e.t, "kind": e.kind,
                              "duration": e.duration,
                              "magnitude": e.magnitude, "target": e.target})
+            if self.tracer is not None:
+                self.tracer.instant(
+                    "fault", e.kind, float(t), "faults",
+                    target=e.target, magnitude=e.magnitude,
+                    duration=e.duration, t_sched=e.t)
 
     def counts(self) -> Dict[str, int]:
         """Injections actually observed so far, by kind (a scripted event

@@ -197,7 +197,7 @@ class TokenBudgetScheduler:
             now = eng.clock()
             for req in take:
                 req.slot = free.pop(0)
-                self._place(rt, req, replay_from=0, now=now)
+                self._place(rt, req, replay_from=0, now=now, eng=eng)
                 taken.append(req)
             return taken
         if rt.kv.alloc_fault():
@@ -224,6 +224,7 @@ class TokenBudgetScheduler:
                                      sum(r is not None for r in rt.active))
                 rt.queue.remove(req)
                 taken.append(req)
+                eng._trace_enter(rt, req, "swapping")
                 continue
             full = min(len(req.tokens) + req.max_new, eng.max_seq)
             # growth mode admits on the prompt's pages only; decode pages
@@ -240,6 +241,7 @@ class TokenBudgetScheduler:
                 req.phase = Phase.FINISHED
                 rt.queue.remove(req)
                 rt.done.append(req)
+                eng._trace_done(rt, req)
                 continue
             if rt.prefix is not None:
                 # cold tier: re-adopt swapped-out prefix pages matching this
@@ -276,12 +278,13 @@ class TokenBudgetScheduler:
                 if rt.prefix is not None:
                     rt.prefix.note_miss(len(req.tokens))
                 rt.kv.alloc_slot(req.slot, need)
-            self._place(rt, req, replay_from=replay_from, now=eng.clock())
+            self._place(rt, req, replay_from=replay_from, now=eng.clock(),
+                        eng=eng)
             rt.queue.remove(req)
             taken.append(req)
         return taken
 
-    def _place(self, rt, req, *, replay_from: int, now: float):
+    def _place(self, rt, req, *, replay_from: int, now: float, eng=None):
         req.phase = Phase.PREFILLING
         req.prefill_pos = replay_from
         req.t_admit = now
@@ -289,6 +292,8 @@ class TokenBudgetScheduler:
         rt.prefill_tokens += len(req.tokens)
         rt.peak_active = max(rt.peak_active,
                              sum(r is not None for r in rt.active))
+        if eng is not None:
+            eng._trace_enter(rt, req, "prefilling")
 
     # -- prefill chunks ------------------------------------------------
     def prefill_chunks(self, rt, decode_tokens: int) -> List[PrefillChunk]:

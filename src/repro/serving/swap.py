@@ -210,6 +210,11 @@ class HostSwapPool:
         self.read_faults = 0
         self.corruptions = 0
         self._rid = 0
+        #: optional obs.Tracer; every logged copy also emits a kind="swap"
+        #: instant on the owning engine's virtual clock (trace_prefix
+        #: namespaces the track when engines share one tracer, e.g. disagg)
+        self.tracer = None
+        self.trace_prefix = ""
 
     def __contains__(self, key) -> bool:
         return key in self.pages
@@ -225,6 +230,11 @@ class HostSwapPool:
         self.copies.append(CopyRequest(self._rid, self.tenant, self.priority,
                                        self.nice, size, direction, t))
         self._rid += 1
+        if self.tracer is not None:
+            self.tracer.instant("swap", direction, float(t),
+                                f"{self.trace_prefix}swap/{self.tenant}",
+                                bytes=int(size), direction=direction,
+                                tenant=self.tenant)
 
     # -- device -> host ------------------------------------------------
     def put(self, pools, key, page: int, t: float = 0.0) -> int:

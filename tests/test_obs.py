@@ -1,0 +1,326 @@
+"""Telemetry plane: structured tracing, windowed metrics, SLO timelines.
+
+Covers the obs package in isolation (nearest-rank percentiles, log-linear
+histograms, tracer level filtering, the flight-recorder ring, schema
+validation, Perfetto/JSONL export, SLO-timeline attribution, the
+controller's plan-cause taxonomy) and the determinism contract end to end:
+a traced engine run emits bit-equal tokens to an untraced one, and two
+seeded replays — including a chaos replay under a fault storm and a
+disaggregated prefill/decode run — produce byte-identical JSONL streams.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.compute import LoadSignal
+from repro.core.controller import (OnlineController, PlanFrontier,
+                                   ResourcePlan)
+from repro.core.tenancy import TenantSpec
+from repro.serving import (DisaggregatedEngine, FaultEvent, FaultPlane,
+                           ServingEngine)
+
+MAX_SEQ = 32
+PAGE = 4
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    import jax
+    from repro.configs import smoke_config
+    from repro.models import transformer as tf
+    cfg = smoke_config("stablelm-1.6b").replace(num_layers=1,
+                                                activation_dtype="float32")
+    return cfg, tf.init_params(jax.random.key(7), cfg)
+
+
+def _prompts(seed, n, length=8):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, 100, length).astype(np.int32) for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# percentiles: one nearest-rank implementation everywhere
+# ---------------------------------------------------------------------------
+
+def test_percentile_nearest_rank():
+    xs = list(range(1, 11))                      # 1..10
+    # np.percentile's linear interpolation gives 9.91 here; nearest-rank
+    # must return an *observed* sample: rank ceil(0.99*10)=10 -> 10.0
+    assert obs.percentile(xs, 99) == 10.0
+    assert obs.percentile(xs, 50) == 5.0         # ceil(0.5*10)=5
+    assert obs.percentile(xs, 0) == 1.0
+    assert obs.percentile(xs, 100) == 10.0
+    assert obs.percentile([], 99) is None
+    assert obs.percentile([3.0], 99) == 3.0
+    assert obs.percentile(np.array([2.0, 1.0]), 99) == 2.0   # accepts ndarray
+
+
+def test_pcts_batch_matches_percentile():
+    vals = [0.001 * i for i in range(1, 8)]
+    out = obs.pcts(vals, {"p50": 50, "p99": 99}, scale=1e3)
+    assert out["p50_ms"] == pytest.approx(obs.percentile(vals, 50) * 1e3)
+    assert out["p99_ms"] == pytest.approx(obs.percentile(vals, 99) * 1e3)
+    assert obs.pcts([], {"p50": 50}, 1e3) == {"p50_ms": None}
+
+
+def test_histogram_bounded_error_and_window():
+    h = obs.Histogram()
+    vals = [1.5 ** i for i in range(1, 30)]
+    for v in vals:
+        h.record(v)
+    for q in (50, 99):
+        exact = obs.percentile(vals, q)
+        assert h.percentile(q) == pytest.approx(exact, rel=0.05)
+    h.tick()                                     # window rolls over
+    assert h.percentile(99, window=True) is None
+    h.record(7.0)
+    assert h.percentile(99, window=True) == pytest.approx(7.0, rel=0.05)
+    assert h.percentile(99) == pytest.approx(obs.percentile(vals, 99),
+                                             rel=0.05)   # cumulative keeps all
+
+
+def test_registry_counters_gauges_snapshot():
+    reg = obs.MetricsRegistry()
+    reg.counter("shed").add(3)
+    reg.gauge("hit").set(0.25)
+    reg.histogram("lat_ms").record(4.0)
+    reg.tick()
+    reg.counter("shed").add(1)
+    snap = reg.snapshot()
+    assert snap["counters"]["shed"]["value"] == 4
+    assert snap["counters"]["shed"]["window"] == 1
+    assert snap["gauges"]["hit"]["value"] == 0.25
+    assert snap["histograms"]["lat_ms"]["n"] == 1
+    assert snap["histograms"]["lat_ms"]["p99"] == pytest.approx(4.0, rel=0.05)
+
+
+# ---------------------------------------------------------------------------
+# tracer: levels, ring, flight recorder, export
+# ---------------------------------------------------------------------------
+
+def test_tracer_level_filtering():
+    tr = obs.Tracer("coarse")
+    tr.instant("plan", "slo_guard", 1.0, "plan")          # coarse: kept
+    tr.instant("quantum", "LS", 2.0, "quanta/ls0")        # info: dropped
+    tr.instant("kernel", "k0", 3.0, "sim/ls0")            # debug: dropped
+    assert [e["kind"] for e in tr.events] == ["plan"]
+    assert tr.dropped == 2
+    off = obs.Tracer("off", ring=1)
+    off.instant("plan", "slo_guard", 1.0, "plan")
+    assert off.events == [] and not off.enabled("plan")
+
+
+def test_flight_recorder_ring_and_triggers():
+    tr = obs.Tracer("info", ring=4, max_dumps=2)
+    for i in range(10):
+        tr.instant("quantum", "BE", float(i), "quanta/be0")
+    assert len(tr.ring) == 4 and len(tr.events) == 10
+    tr.instant("violation", "slo", 10.0, "slo", rid=1, tenant="ls0")
+    assert len(tr.dumps) == 1
+    dump = tr.dumps[0]
+    assert dump["trigger"]["kind"] == "violation"
+    assert dump["events"][-1]["kind"] == "violation"      # ring includes it
+    with pytest.raises(obs.SchemaError):
+        tr.dump_on("not_a_kind")
+
+
+def test_schema_validation():
+    ok = {"t": 1.0, "ph": "I", "kind": "fault", "name": "alloc_fail",
+          "track": "faults", "args": {"target": "be0", "magnitude": 1.0,
+                                      "duration": 2.0}}
+    obs.validate_event(ok)
+    with pytest.raises(obs.SchemaError):                  # closed registry
+        obs.validate_event(dict(ok, kind="mystery"))
+    with pytest.raises(obs.SchemaError):                  # cause taxonomy
+        obs.validate_event({"t": 0.0, "ph": "I", "kind": "plan",
+                            "name": "because", "track": "plan",
+                            "args": {"sm_be": 0.5, "ch_be": 0.5}})
+    with pytest.raises(obs.SchemaError):                  # missing required
+        obs.validate_event({"t": 0.0, "ph": "I", "kind": "fault",
+                            "name": "alloc_fail", "track": "faults",
+                            "args": {}})
+    with pytest.raises(obs.SchemaError):
+        obs.validate_events([ok, dict(ok, ph="Z")])
+
+
+def test_perfetto_and_jsonl_export():
+    tr = obs.Tracer("info")
+    tr.begin("request", "r1", 1.0, "ls0/slot0", rid=1, tenant="ls0")
+    tr.end("request", "r1", 5.0, "ls0/slot0")
+    tr.counter("ls_load", 2.0, 0.5)
+    pf = tr.perfetto()
+    metas = [e for e in pf if e.get("ph") == "M"]
+    slices = [e for e in pf if e.get("ph") in ("B", "E")]
+    assert {m["args"]["name"] for m in metas} >= {"ls0/slot0", "signals"}
+    assert len(slices) == 2 and slices[0]["name"] == "r1"
+    tids = {e["tid"] for e in slices}
+    assert len(tids) == 1                                  # same track
+    lines = tr.jsonl().splitlines()
+    assert len(lines) == 3
+    for ln in lines:
+        ev = json.loads(ln)
+        assert list(ev) == sorted(ev)                      # canonical order
+
+
+# ---------------------------------------------------------------------------
+# SLO timeline attribution
+# ---------------------------------------------------------------------------
+
+def _done(t, rid, ok, t_submit):
+    return {"t": t, "ph": "I", "kind": "request", "name": "done",
+            "track": "slo", "args": {"rid": rid, "tenant": "ls0", "ok": ok,
+                                     "t_submit": t_submit}}
+
+
+def test_slo_timeline_attributes_overlapping_causes():
+    evs = [
+        {"t": 4.0, "ph": "I", "kind": "fault", "name": "alloc_fail",
+         "track": "faults", "args": {"target": "be0", "magnitude": 1.0,
+                                     "duration": 2.0}},
+        _done(3.0, 1, True, 1.0),
+        _done(6.0, 2, False, 3.5),       # fault at 4.0 inside [3.5, 6.0]
+        _done(20.0, 3, False, 18.0),     # nothing overlaps: unattributed
+        _done(21.0, 4, None, 19.0),      # no SLO: excluded from attainment
+    ]
+    tl = obs.SLOTimeline(evs, window=10.0)
+    assert tl.overall_attainment == pytest.approx(1 / 3)
+    wins = tl.violation_windows()
+    assert len(wins) == 2
+    assert ("fault:alloc_fail", 1) in wins[0]["causes"]
+    assert wins[1]["causes"] == [("unattributed", 1)]
+    assert not tl.all_violations_attributed()
+    attributed = obs.SLOTimeline(evs[:3], window=10.0)
+    assert attributed.all_violations_attributed()
+    assert "fault:alloc_fail" in attributed.format_table()
+
+
+# ---------------------------------------------------------------------------
+# plan-cause taxonomy from the online controller
+# ---------------------------------------------------------------------------
+
+def test_controller_last_cause_taxonomy():
+    lend = ResourcePlan(1.0, 1.0, 0.5, (), (), 2.0)
+    mid = ResourcePlan(0.5, 0.5, 0.5, (), (), 2.0)
+    cons = ResourcePlan(0.1, 1 / 6, 0.5, (), (), 2.0)
+    ctl = OnlineController(PlanFrontier([(0.0, lend), (0.5, mid),
+                                         (1.0, cons)]), idle_patience=1)
+    busy = LoadSignal(ls_queued=4, ls_active=2, ls_slots=2)
+    idle = LoadSignal(ls_queued=0, ls_active=0, ls_slots=2)
+    half = LoadSignal(ls_queued=0, ls_active=1, ls_slots=2)
+    slo = LoadSignal(ls_queued=0, ls_active=1, ls_slots=2,
+                     ls_slo_attainment=0.5)
+
+    ctl.decide(half, 0.0)                      # starts most conservative
+    assert ctl.last_cause == "hysteresis"      # one regime back: cons -> mid
+    ctl.decide(idle, 1.0)
+    assert ctl.last_cause == "lending"         # mid -> lend (index 0)
+    ctl.decide(busy, 2.0)
+    assert ctl.last_cause == "snap_back"       # lend -> cons, load-driven
+    ctl.decide(idle, 3.0)
+    assert ctl.last_cause == "hysteresis"      # cons -> mid on idle
+    ctl.decide(slo, 4.0)
+    assert ctl.last_cause == "slo_guard"       # attainment < guard: saturate
+    ctl.decide(slo, 5.0)
+    assert ctl.last_cause is None              # already at cons: no move
+    assert all(c in obs.PLAN_CAUSES
+               for c in ("snap_back", "hysteresis", "lending", "slo_guard"))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end determinism: traced == untraced, replay == replay
+# ---------------------------------------------------------------------------
+
+def _controller():
+    lend = ResourcePlan(1.0, 1.0, 0.5, (), (), 2.0)
+    cons = ResourcePlan(0.1, 1 / 6, 0.5, (), (), 2.0, prefill_budget=8)
+    return OnlineController(PlanFrontier([(0.0, lend), (1.0, cons)]),
+                            idle_patience=1)
+
+
+def _run(cfg, params, *, tracer=None, faults=None, deadline=None):
+    state = {"t": 0.0}
+    eng = ServingEngine(max_seq=MAX_SEQ, paged=True, page_size=PAGE,
+                        chunk_size=PAGE, slots_ls=2, slots_be=2,
+                        kv_pages=10, grow_pages=True, swap=True,
+                        cold_dtype="fp16", controller=_controller(),
+                        control_interval=2, prefix_cache=True, faults=faults,
+                        now_fn=lambda: state["t"], tracer=tracer)
+    eng.add_tenant(TenantSpec("ls0", "LS"), cfg, params=params)
+    eng.add_tenant(TenantSpec("be0", "BE"), cfg, params=params)
+    reqs = [eng.submit("ls0", p, max_new=3, deadline=deadline)
+            for p in _prompts(11, 3, 6)]
+    reqs += [eng.submit("be0", p, max_new=16) for p in _prompts(12, 2)]
+    for _ in range(4000):
+        state["t"] += 1.0
+        if not eng.step() and not any(rt.has_work()
+                                      for rt in eng.tenants.values()):
+            break
+    return eng, [[int(x) for x in (r.output or [])] for r in reqs]
+
+
+def test_traced_run_tokens_bitequal_to_untraced(tiny):
+    cfg, params = tiny
+    _, base = _run(cfg, params)
+    tr = obs.Tracer("debug")
+    eng, traced = _run(cfg, params, tracer=tr)
+    assert traced == base                      # tracing is pure observation
+    kinds = {e["kind"] for e in tr.events}
+    assert {"request", "phase", "quantum", "plan", "swap"} <= kinds
+    obs.validate_events(tr.events)
+    # spans balance per track: every B has a later E
+    depth = {}
+    for e in tr.events:
+        if e["ph"] == "B":
+            depth[e["track"]] = depth.get(e["track"], 0) + 1
+        elif e["ph"] == "E":
+            depth[e["track"]] = depth[e["track"]] - 1
+            assert depth[e["track"]] >= 0
+    assert all(v == 0 for v in depth.values())
+    snap = eng.registry.snapshot()
+    assert "measured_prefix_hit" in snap["gauges"]        # per control tick
+    m = eng.metrics()
+    assert "_registry" in m and m["_trace"]["events"] == len(tr.events)
+
+
+def test_chaos_replay_trace_byte_identical(tiny):
+    cfg, params = tiny
+    storm = lambda: FaultPlane(                           # noqa: E731
+        [FaultEvent(5.0, "ctl_missed_tick", duration=20.0),
+         FaultEvent(10.0, "swap_write_fail", duration=10.0, target="be0"),
+         FaultEvent(12.0, "page_corrupt", target="be0")], seed=3)
+    streams = []
+    for _ in range(2):
+        tr = obs.Tracer("info")
+        _, outs = _run(cfg, params, tracer=tr, faults=storm(), deadline=40.0)
+        streams.append((tr.jsonl(), outs))
+    assert streams[0][0] == streams[1][0]      # byte-identical JSONL
+    assert streams[0][1] == streams[1][1]
+    evs = [json.loads(ln) for ln in streams[0][0].splitlines()]
+    assert any(e["kind"] == "fault" for e in evs)
+    obs.validate_events(evs)
+
+
+def test_disagg_replay_trace_byte_identical(tiny):
+    cfg, params = tiny
+    streams = []
+    for _ in range(2):
+        tr = obs.Tracer("info")
+        dis = DisaggregatedEngine(max_seq=MAX_SEQ, page_size=PAGE,
+                                  chunk_size=PAGE, n_devices=2, n_prefill=1,
+                                  tracer=tr)
+        dis.add_tenant(TenantSpec("ls0", "LS"), cfg, params=params)
+        for p in _prompts(13, 2, 6):
+            dis.submit("ls0", p, max_new=3)
+        dis.run_until_idle(max_rounds=5000)
+        streams.append((tr.jsonl(), dis.outputs("ls0")))
+    assert streams[0][0] == streams[1][0]
+    assert streams[0][1] == streams[1][1]
+    evs = [json.loads(ln) for ln in streams[0][0].splitlines()]
+    kinds = {e["kind"] for e in evs}
+    assert "flow" in kinds                     # interconnect lifetimes traced
+    flows = [e for e in evs if e["kind"] == "flow"]
+    assert all(e["args"]["t_end"] >= e["args"]["t_start"] >= 0.0
+               for e in flows)
+    obs.validate_events(evs)
