@@ -37,6 +37,17 @@ def run() -> Rows:
         a, b, a, b, sm_be=0.3, block_m=128, block_n=128,
         block_k=128)[0].block_until_ready())
     rows.add("kernels/dual_tenant_matmul_256", us, "sm_be=0.3")
+    # fused dual-tenant attention: one grid serving both tenants under the
+    # BE tile quota, vs the same work as two sequential flash kernels
+    us = timeit(lambda: ops.dual_tenant_attention(
+        q, k, v, q, k, v, sm_be=0.3, block_q=128,
+        block_k=128)[0].block_until_ready())
+    rows.add("kernels/dual_tenant_attention_256", us, "sm_be=0.3 fused")
+    us = timeit(lambda: (
+        ops.flash_attention(q, k, v, block_q=128, block_k=128),
+        ops.flash_attention(q, k, v, block_q=128, block_k=128),
+    )[0].block_until_ready())
+    rows.add("kernels/sequential_attention_2x256", us, "2 kernels baseline")
     qs = jax.random.normal(ks[0], (1, 128, 2, 16), jnp.float32)
     ws = -jnp.abs(jax.random.normal(ks[3], (1, 128, 2, 16))) * 0.1
     us = timeit(lambda: ops.ssd_scan(qs, qs, qs, ws,

@@ -328,6 +328,79 @@ class OnlineController:
         return self.plan
 
 
+class ChunkGovernor:
+    """SLO-driven chunk sizing (the temporal twin of the tidal SM loop):
+    AIMD on the engine's prefill ``chunk_size`` from the windowed LS TBT
+    p99 the registry already computes for :class:`OnlineController`.
+
+    A window whose TBT p99 exceeds ``target_tbt_ms`` halves the chunk
+    (multiplicative decrease — a long co-scheduled prefill chunk is the
+    direct cause of a decode-latency spike, so react in one window); after
+    ``patience`` consecutive windows below ``headroom * target`` the chunk
+    doubles back (additive-ish recovery — regrow BE prefill efficiency
+    only once the SLO shows slack). The BE prefill budget rides along as
+    ``budget_chunks`` chunks per quantum, so shrinking the chunk also
+    shrinks how much BE prefill a quantum may interleave. Chunk sizes are
+    clamped to [min_chunk, max_chunk]; windows with no TBT samples hold
+    steady.
+
+    ``update`` returns ``(chunk_size, prefill_budget)`` when the setting
+    changed, else None — the engine logs adoptions as ``chunk_adapt``
+    transitions.
+    """
+
+    def __init__(self, *, target_tbt_ms: float, chunk: int = 64,
+                 min_chunk: int = 8, max_chunk: int = 512,
+                 headroom: float = 0.5, patience: int = 2,
+                 budget_chunks: int = 2):
+        assert 0 < min_chunk <= chunk <= max_chunk
+        assert 0.0 < headroom <= 1.0
+        self.target_tbt_ms = float(target_tbt_ms)
+        self.chunk = int(chunk)
+        self.min_chunk = int(min_chunk)
+        self.max_chunk = int(max_chunk)
+        self.headroom = float(headroom)
+        self.patience = max(int(patience), 1)
+        self.budget_chunks = max(int(budget_chunks), 1)
+        self._calm = 0
+        self.shrinks = 0
+        self.grows = 0
+        #: (tbt_p99_ms, chunk) per consulted window (telemetry)
+        self.history: List[Tuple[Optional[float], int]] = []
+
+    @property
+    def prefill_budget(self) -> int:
+        return self.chunk * self.budget_chunks
+
+    def update(self, tbt_p99_ms: Optional[float]):
+        self.history.append((tbt_p99_ms, self.chunk))
+        if tbt_p99_ms is None:
+            return None
+        prev = self.chunk
+        if tbt_p99_ms > self.target_tbt_ms:
+            self._calm = 0
+            self.chunk = max(self.chunk // 2, self.min_chunk)
+            if self.chunk != prev:
+                self.shrinks += 1
+        elif tbt_p99_ms <= self.headroom * self.target_tbt_ms:
+            self._calm += 1
+            if self._calm >= self.patience:
+                self._calm = 0
+                self.chunk = min(self.chunk * 2, self.max_chunk)
+                if self.chunk != prev:
+                    self.grows += 1
+        else:
+            self._calm = 0
+        if self.chunk == prev:
+            return None
+        return self.chunk, self.prefill_budget
+
+    def stats(self) -> dict:
+        return {"chunk": self.chunk, "shrinks": self.shrinks,
+                "grows": self.grows, "windows": len(self.history),
+                "target_tbt_ms": self.target_tbt_ms}
+
+
 @dataclass
 class PlanSchedule:
     """Fixed time-indexed plan sequence with the controller ``decide``

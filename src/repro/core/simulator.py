@@ -53,24 +53,33 @@ def request_kernels(cfg: ModelConfig, B: int, S: int, mode: str,
                     dev: DeviceSpec, max_kernels: int = 24,
                     kv_write=None, prefix: int = 0,
                     chunk=None, swap_bytes: int = 0,
-                    xfer_bytes: int = 0) -> List[Kernel]:
+                    xfer_bytes: int = 0, tile=None) -> List[Kernel]:
     """``chunk`` (prefill only) models chunked prefill: the op stream is
     coalesced into one kernel per prompt chunk — each kernel carries the
     chunk's re-read tax from the cost model, and the kernel boundary is the
     simulator's preemption point (the engine-quantum analogue), which is
-    what lets a co-scheduled LS tenant interleave mid-prompt. ``swap_bytes``
-    adds the request's KV host-tier fault traffic as a zero-FLOP
-    memory-bound op, charged at the owning class's bandwidth split like any
-    other byte; ``xfer_bytes`` does the same for the request's cross-device
-    KV page-group transfer (disaggregated prefill/decode over
-    core.interconnect), so multi-device runs charge transfer time to the
-    owning class."""
+    what lets a co-scheduled LS tenant interleave mid-prompt. ``tile``
+    (prefill only) refines that boundary below the chunk: one kernel per
+    ``tile`` tokens — the sub-chunk preemption point — while the cost model
+    still charges the cache re-read tax at ``chunk`` granularity, so a
+    finer tile buys preemption latency without re-pricing the prefill.
+    ``swap_bytes`` adds the request's KV host-tier fault traffic as a
+    zero-FLOP memory-bound op, charged at the owning class's bandwidth
+    split like any other byte; ``xfer_bytes`` does the same for the
+    request's cross-device KV page-group transfer (disaggregated
+    prefill/decode over core.interconnect), so multi-device runs charge
+    transfer time to the owning class."""
     ops = model_costs(cfg, B, S, mode, kv_write=kv_write, prefix=prefix,
                       chunk=chunk, swap_bytes=swap_bytes,
                       xfer_bytes=xfer_bytes)
     span = max(S - min(int(prefix), max(S - 1, 0)), 1)
-    if chunk and mode == "prefill" and chunk < span:
-        n_chunks = -(-span // int(chunk))
+    gran = None
+    if mode == "prefill":
+        gran = int(chunk) if chunk else None
+        if tile:
+            gran = int(tile) if gran is None else min(gran, int(tile))
+    if gran and gran < span:
+        n_chunks = -(-span // gran)
         per = max(1, len(ops) // n_chunks)
     else:
         per = max(1, len(ops) // max_kernels)

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .pallas_compat import CompilerParams
+from .pallas_compat import CompilerParams, interpret_default
 
 NEG_INF = -1e30
 
@@ -84,11 +84,14 @@ def _pos_vector(pos, B):
 
 
 def decode_attention(q, k_cache, v_cache, pos, *, block_k=128,
-                     interpret=False, kv_layout="bshd"):
+                     interpret=None, kv_layout="bshd"):
     """q: [B,H,D] (one new token); caches: [B,Smax,Hkv,D] (``kv_layout=
     "bshd"``, the default) or KV-major [B,Hkv,Smax,D] (``"bhsd"``, the
     serving cache layout — saves the transpose); pos: scalar int32 or [B]
-    per-row positions. Returns [B,H,D]."""
+    per-row positions. ``interpret=None`` auto-detects the backend
+    (CPU hosts interpret, TPU compiles). Returns [B,H,D]."""
+    if interpret is None:
+        interpret = interpret_default()
     B, H, D = q.shape
     if kv_layout == "bshd":
         kt = k_cache.transpose(0, 2, 1, 3)                   # [B,Hkv,S,D]
@@ -151,7 +154,7 @@ def decode_attention(q, k_cache, v_cache, pos, *, block_k=128,
 
 
 def decode_attention_paged(q, k_pages, v_pages, page_table, pos, *,
-                           interpret=False):
+                           interpret=None):
     """Paged flash-decode: the KV lives in a shared page pool and each row's
     blocks are gathered through its page table *inside the BlockSpec index
     map* (one page = one kv block; no [B,Smax] dense view is materialized).
@@ -161,6 +164,8 @@ def decode_attention_paged(q, k_pages, v_pages, page_table, pos, *,
     the kv index map clamps to the row's last valid page); pos: [B] int32.
     The visible window is P * page_size tokens. Returns [B,H,D].
     """
+    if interpret is None:
+        interpret = interpret_default()
     B, H, D = q.shape
     n_pages, Hkv, page_size, _ = k_pages.shape
     P = page_table.shape[1]

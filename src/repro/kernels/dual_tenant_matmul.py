@@ -22,24 +22,40 @@ from .pallas_compat import CompilerParams
 
 
 def _schedule(n_ls: int, n_be: int, sm_be: float, round_tiles: int = 8):
-    """Static interleave of LS/BE tile-row ids honoring the BE quota."""
-    be_per_round = max(0, min(round_tiles - 1, int(sm_be * round_tiles)))
-    ls_per_round = round_tiles - be_per_round
+    """Static interleave of LS/BE tile-row ids honoring the BE quota.
+
+    Fractional quotas accumulate as credit across rounds (``sm_be *
+    round_tiles < 1`` earns BE roughly one tile every ``1 / (sm_be *
+    round_tiles)`` rounds instead of starving until LS drains), and once
+    either tenant runs out of tiles the other fills every remaining round —
+    a pure-BE tail after LS completes runs at full width (tidal lending),
+    it no longer waits for a terminal drain clause."""
+    round_tiles = max(int(round_tiles), 2)
+    be_frac = max(0.0, min(float(sm_be), (round_tiles - 1) / round_tiles))
     order = []
     i = j = 0
-    while i < n_ls or j < n_be:
-        for _ in range(ls_per_round):
+    credit = 0.0
+    while i < n_ls and j < n_be:
+        # per-round BE quota with carried fractional credit; BE never takes
+        # the whole round while LS tiles remain
+        credit += be_frac * round_tiles
+        be_now = min(int(credit), round_tiles - 1, n_be - j)
+        for _ in range(round_tiles - be_now):
             if i < n_ls:
                 order.append((0, i))
                 i += 1
-        for _ in range(be_per_round):
-            if j < n_be:
-                order.append((1, j))
-                j += 1
-        if be_per_round == 0 and i >= n_ls:   # drain BE when LS done (lending)
-            while j < n_be:
-                order.append((1, j))
-                j += 1
+        for _ in range(be_now):
+            order.append((1, j))
+            j += 1
+            credit -= 1.0
+    # interleaved drain: whichever tenant still holds tiles owns every
+    # remaining round in full
+    while i < n_ls:
+        order.append((0, i))
+        i += 1
+    while j < n_be:
+        order.append((1, j))
+        j += 1
     return order
 
 

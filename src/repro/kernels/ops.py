@@ -14,11 +14,9 @@ from .prefill_attention import (prefill_attention as _prefill,
                                 prefill_attention_paged as _prefill_paged)
 from .spt_gather import spt_gather as _gather, spt_scatter as _scatter
 from .dual_tenant_matmul import dual_tenant_matmul as _dtm
+from .dual_tenant_attention import dual_tenant_attention as _dta
+from .pallas_compat import interpret_default as _interpret_default
 from .ssd_scan import ssd_scan as _ssd
-
-
-def _interpret_default() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
@@ -50,18 +48,18 @@ def decode_attention_paged(q, k_pages, v_pages, page_table, pos, *,
 
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
 def prefill_attention(q, k_cache, v_cache, pos, *, block_k=128,
-                      interpret=None):
+                      interpret=None, abort=None):
     interpret = _interpret_default() if interpret is None else interpret
     return _prefill(q, k_cache, v_cache, pos, block_k=block_k,
-                    interpret=interpret)
+                    interpret=interpret, abort=abort)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def prefill_attention_paged(q, k_pages, v_pages, page_table, pos, *,
-                            interpret=None):
+                            interpret=None, abort=None):
     interpret = _interpret_default() if interpret is None else interpret
     return _prefill_paged(q, k_pages, v_pages, page_table, pos,
-                          interpret=interpret)
+                          interpret=interpret, abort=abort)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -83,6 +81,17 @@ def dual_tenant_matmul(a_ls, b_ls, a_be, b_be, *, sm_be=0.3, block_m=128,
     interpret = _interpret_default() if interpret is None else interpret
     return _dtm(a_ls, b_ls, a_be, b_be, sm_be=sm_be, block_m=block_m,
                 block_n=block_n, block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("sm_be", "block_q", "block_k",
+                                             "round_tiles", "interpret"))
+def dual_tenant_attention(q_ls, k_ls, v_ls, q_be, k_be, v_be, *, sm_be=0.3,
+                          block_q=128, block_k=128, round_tiles=8,
+                          interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _dta(q_ls, k_ls, v_ls, q_be, k_be, v_be, sm_be=sm_be,
+                block_q=block_q, block_k=block_k, round_tiles=round_tiles,
+                interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

@@ -1,7 +1,17 @@
 """Pallas API-skew shim: newer jax renamed ``pltpu.TPUCompilerParams`` to
 ``pltpu.CompilerParams``. Import ``CompilerParams`` from here so the kernels
 build against both."""
+import jax
 from jax.experimental.pallas import tpu as pltpu
 
 CompilerParams = getattr(pltpu, "CompilerParams",
                          getattr(pltpu, "TPUCompilerParams", None))
+
+
+def interpret_default() -> bool:
+    """Backend-derived default for a kernel's ``interpret=`` knob: CPU hosts
+    (tests, CI containers) run the Pallas interpreter, a TPU backend
+    compiles to Mosaic. Module-level kernel entry points take
+    ``interpret=None`` and resolve it here, so callers never hardcode the
+    execution mode."""
+    return jax.default_backend() != "tpu"

@@ -20,6 +20,18 @@ the causal mask is per flattened row (``k_pos <= pos[b] + row // G``).
 Ragged early-exit as in decode: kv blocks past a row's last chunk position
 are index-map-pinned and compute-predicated off, so per-row cost scales with
 ``pos + Sq``, not ``Smax``.
+
+Abort/progress protocol (sub-chunk preemption): ``abort`` is a per-row cap
+on how many of the chunk's query positions may complete this launch.
+Compute for kv blocks past position ``pos + abort - 1`` is ``pl.when``-
+predicated off (abort == 0 skips the row entirely), rows at or past the cap
+are causally masked out, and a ``progress`` output reports per row how far
+the launch got — ``min(abort, Sq)``. Because each query row's online
+softmax is independent and already causal, the first ``abort`` rows are
+bit-equal to running a chunk of exactly ``abort`` tokens, which is what
+lets the serving engine abort a BE chunk at tile granularity and later
+resume it as a smaller chunk with no token drift. ``interpret=None``
+auto-detects the backend (CPU hosts interpret, TPU compiles).
 """
 from __future__ import annotations
 
@@ -30,13 +42,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .pallas_compat import CompilerParams
+from .pallas_compat import CompilerParams, interpret_default
 
 NEG_INF = -1e30
 
 
-def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-            scale, block_k, sq, group):
+def _kernel(pos_ref, abort_ref, q_ref, k_ref, v_ref, o_ref, prog_ref,
+            m_scr, l_scr, acc_scr, *, scale, block_k, sq, group):
     b = pl.program_id(0)
     ki = pl.program_id(2)
 
@@ -46,17 +58,20 @@ def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    # early exit past the chunk's last query position (pos + sq - 1)
-    @pl.when(ki <= (pos_ref[b] + sq - 1) // block_k)
+    # early exit past the last *allowed* query position (pos + abort - 1);
+    # an aborted-at-zero row runs no kv block at all
+    @pl.when((abort_ref[b] > 0)
+             & (ki <= (pos_ref[b] + abort_ref[b] - 1) // block_k))
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32) * scale          # [Sq*G, D]
         k = k_ref[0, 0].astype(jnp.float32)                  # [bk, D]
         v = v_ref[0, 0].astype(jnp.float32)
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [Sq*G, bk]
         k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        q_pos = pos_ref[b] + jax.lax.broadcasted_iota(jnp.int32, s.shape,
-                                                      0) // group
-        s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        row = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // group
+        q_pos = pos_ref[b] + row
+        # causal mask plus the abort cap: rows at/past the cap see no keys
+        s = jnp.where((k_pos <= q_pos) & (row < abort_ref[b]), s, NEG_INF)
 
         m_prev = m_scr[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
@@ -71,22 +86,38 @@ def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     def _fin():
         l = jnp.maximum(l_scr[...], 1e-30)
         o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+        prog_ref[0, 0] = jnp.minimum(abort_ref[b], sq)
 
 
-def _paged_kernel(pt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
-                  acc_scr, *, scale, block_k, sq, group):
+def _paged_kernel(pt_ref, pos_ref, abort_ref, q_ref, k_ref, v_ref, o_ref,
+                  prog_ref, m_scr, l_scr, acc_scr, *, scale, block_k, sq,
+                  group):
     # the page table is consumed by the BlockSpec index maps only
     del pt_ref
-    _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
-            scale=scale, block_k=block_k, sq=sq, group=group)
+    _kernel(pos_ref, abort_ref, q_ref, k_ref, v_ref, o_ref, prog_ref,
+            m_scr, l_scr, acc_scr, scale=scale, block_k=block_k, sq=sq,
+            group=group)
+
+
+def _abort_array(abort, B, Sq):
+    """Per-row position cap as an int32 [B] prefetch scalar, clamped to
+    [0, Sq]; ``None`` means the whole chunk (the no-preemption launch)."""
+    if abort is None:
+        return jnp.full((B,), Sq, jnp.int32)
+    arr = jnp.broadcast_to(jnp.asarray(abort, jnp.int32), (B,))
+    return jnp.clip(arr, 0, Sq)
 
 
 def prefill_attention(q, k_cache, v_cache, pos, *, block_k=128,
-                      interpret=False):
+                      interpret=None, abort=None):
     """q: [B,Sq,H,D] (one prompt chunk per row); caches: KV-major
     [B,Hkv,Smax,D] with the chunk's keys/values already written; pos: [B]
     int32 chunk start positions (query i of row b sits at pos[b]+i).
-    Returns [B,Sq,H,D]."""
+    Returns [B,Sq,H,D]; with ``abort`` (scalar or [B] int32 position cap)
+    returns ``(out, progress)`` where ``progress`` [B] int32 reports the
+    completed positions per row — rows past the cap hold garbage."""
+    if interpret is None:
+        interpret = interpret_default()
     B, Sq, H, D = q.shape
     Hkv, Smax = k_cache.shape[1], k_cache.shape[2]
     G = H // Hkv
@@ -108,25 +139,30 @@ def prefill_attention(q, k_cache, v_cache, pos, *, block_k=128,
     qg = q.reshape(B, Sq, Hkv, G, D).transpose(0, 2, 1, 3, 4) \
           .reshape(B, Hkv, Sq * G, D)
     pos_arr = jnp.asarray(pos, jnp.int32)
+    abort_arr = _abort_array(abort, B, Sq)
 
-    def _kv_index(b, h, j, pos):
-        return (b, h, jnp.minimum(j, (pos[b] + Sq - 1) // block_k), 0)
+    def _kv_index(b, h, j, pos, ab):
+        last = pos[b] + jnp.maximum(ab[b], 1) - 1
+        return (b, h, jnp.minimum(j, last // block_k), 0)
 
-    out = pl.pallas_call(
+    out, prog = pl.pallas_call(
         functools.partial(_kernel, scale=D ** -0.5, block_k=block_k, sq=Sq,
                           group=G),
-        out_shape=jax.ShapeDtypeStruct((B, Hkv, Sq * G, D), q.dtype),
+        out_shape=(jax.ShapeDtypeStruct((B, Hkv, Sq * G, D), q.dtype),
+                   jax.ShapeDtypeStruct((B, 1), jnp.int32)),
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=2,
             grid=(B, Hkv, Smax // block_k),
             in_specs=[
                 pl.BlockSpec((1, 1, Sq * G, D),
-                             lambda b, h, j, pos: (b, h, 0, 0)),
+                             lambda b, h, j, pos, ab: (b, h, 0, 0)),
                 pl.BlockSpec((1, 1, block_k, D), _kv_index),
                 pl.BlockSpec((1, 1, block_k, D), _kv_index),
             ],
-            out_specs=pl.BlockSpec((1, 1, Sq * G, D),
-                                   lambda b, h, j, pos: (b, h, 0, 0)),
+            out_specs=(pl.BlockSpec((1, 1, Sq * G, D),
+                                    lambda b, h, j, pos, ab: (b, h, 0, 0)),
+                       pl.BlockSpec((1, 1),
+                                    lambda b, h, j, pos, ab: (b, 0))),
             scratch_shapes=[
                 pltpu.VMEM((Sq * G, 1), jnp.float32),
                 pltpu.VMEM((Sq * G, 1), jnp.float32),
@@ -135,13 +171,16 @@ def prefill_attention(q, k_cache, v_cache, pos, *, block_k=128,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(pos_arr, qg, kt, vt)
-    return out.reshape(B, Hkv, Sq, G, D).transpose(0, 2, 1, 3, 4) \
-              .reshape(B, Sq, H, D)
+    )(pos_arr, abort_arr, qg, kt, vt)
+    out = out.reshape(B, Hkv, Sq, G, D).transpose(0, 2, 1, 3, 4) \
+             .reshape(B, Sq, H, D)
+    if abort is None:
+        return out
+    return out, prog[:, 0]
 
 
 def prefill_attention_paged(q, k_pages, v_pages, page_table, pos, *,
-                            interpret=False):
+                            interpret=None, abort=None):
     """Paged chunked-prefill flash attention: each row's kv blocks are
     gathered through its page table inside the BlockSpec index map (one page
     = one kv block, no dense window view).
@@ -149,7 +188,10 @@ def prefill_attention_paged(q, k_pages, v_pages, page_table, pos, *,
     q: [B,Sq,H,D]; {k,v}_pages: [n_pages,Hkv,page_size,D]; page_table:
     [B,P] int32 (entries >= n_pages unmapped — never touched, the index map
     clamps to the row's last valid page); pos: [B] int32 chunk starts.
-    Returns [B,Sq,H,D]."""
+    Returns [B,Sq,H,D]; with ``abort`` returns ``(out, progress)`` under the
+    same sub-chunk protocol as :func:`prefill_attention`."""
+    if interpret is None:
+        interpret = interpret_default()
     B, Sq, H, D = q.shape
     n_pages, Hkv, page_size, _ = k_pages.shape
     P = page_table.shape[1]
@@ -158,26 +200,32 @@ def prefill_attention_paged(q, k_pages, v_pages, page_table, pos, *,
           .reshape(B, Hkv, Sq * G, D)
     pos_arr = jnp.asarray(pos, jnp.int32)
     pt = jnp.asarray(page_table, jnp.int32)
+    abort_arr = _abort_array(abort, B, Sq)
 
-    def _kv_index(b, h, j, pt, pos):
-        jj = jnp.minimum(j, (pos[b] + Sq - 1) // page_size)
+    def _kv_index(b, h, j, pt, pos, ab):
+        last = pos[b] + jnp.maximum(ab[b], 1) - 1
+        jj = jnp.minimum(j, last // page_size)
         return (jnp.minimum(pt[b, jj], n_pages - 1), h, 0, 0)
 
-    out = pl.pallas_call(
+    out, prog = pl.pallas_call(
         functools.partial(_paged_kernel, scale=D ** -0.5, block_k=page_size,
                           sq=Sq, group=G),
-        out_shape=jax.ShapeDtypeStruct((B, Hkv, Sq * G, D), q.dtype),
+        out_shape=(jax.ShapeDtypeStruct((B, Hkv, Sq * G, D), q.dtype),
+                   jax.ShapeDtypeStruct((B, 1), jnp.int32)),
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
+            num_scalar_prefetch=3,
             grid=(B, Hkv, P),
             in_specs=[
                 pl.BlockSpec((1, 1, Sq * G, D),
-                             lambda b, h, j, pt, pos: (b, h, 0, 0)),
+                             lambda b, h, j, pt, pos, ab: (b, h, 0, 0)),
                 pl.BlockSpec((1, 1, page_size, D), _kv_index),
                 pl.BlockSpec((1, 1, page_size, D), _kv_index),
             ],
-            out_specs=pl.BlockSpec((1, 1, Sq * G, D),
-                                   lambda b, h, j, pt, pos: (b, h, 0, 0)),
+            out_specs=(pl.BlockSpec((1, 1, Sq * G, D),
+                                    lambda b, h, j, pt, pos, ab:
+                                    (b, h, 0, 0)),
+                       pl.BlockSpec((1, 1),
+                                    lambda b, h, j, pt, pos, ab: (b, 0))),
             scratch_shapes=[
                 pltpu.VMEM((Sq * G, 1), jnp.float32),
                 pltpu.VMEM((Sq * G, 1), jnp.float32),
@@ -186,6 +234,9 @@ def prefill_attention_paged(q, k_pages, v_pages, page_table, pos, *,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(pt, pos_arr, qg, k_pages, v_pages)
-    return out.reshape(B, Hkv, Sq, G, D).transpose(0, 2, 1, 3, 4) \
-              .reshape(B, Sq, H, D)
+    )(pt, pos_arr, abort_arr, qg, k_pages, v_pages)
+    out = out.reshape(B, Hkv, Sq, G, D).transpose(0, 2, 1, 3, 4) \
+             .reshape(B, Sq, H, D)
+    if abort is None:
+        return out
+    return out, prog[:, 0]

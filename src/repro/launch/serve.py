@@ -76,6 +76,20 @@ def main():
                     help="per-class per-quantum token budget for the "
                          "scheduler: decode tokens first, prefill chunks "
                          "fill the remainder (default: unbounded)")
+    ap.add_argument("--preempt-tile", type=int, default=None,
+                    help="sub-chunk preemption: split BE prefill chunks "
+                         "into tiles of at most this many tokens with a "
+                         "preemption point per tile — an LS arrival "
+                         "mid-quantum aborts the remaining BE tiles and "
+                         "admits in the same quantum; tokens stay "
+                         "bit-equal (default: chunk-granular)")
+    ap.add_argument("--adapt-chunk", type=float, default=None,
+                    metavar="TBT_MS",
+                    help="SLO-driven chunk sizing: attach a ChunkGovernor "
+                         "that halves/doubles --chunk-size from the "
+                         "windowed LS TBT p99 against this target "
+                         "(cause 'chunk_adapt' in the transition log; "
+                         "jax backend)")
     ap.add_argument("--grid-search", action="store_true",
                     help="derive a ResourcePlan offline and thread it in")
     ap.add_argument("--online", action="store_true",
@@ -133,8 +147,8 @@ def main():
 
     from ..configs import get_config, smoke_config
     from ..core.coloring import gpu_hash_model
-    from ..core.controller import (OnlineController, frontier_search,
-                                   grid_search)
+    from ..core.controller import (ChunkGovernor, OnlineController,
+                                   frontier_search, grid_search)
     from ..core.simulator import GPU_DEVICES
     from ..core.tenancy import TenantSpec
     from ..serving import FaultPlane, ServingEngine
@@ -236,6 +250,11 @@ def main():
         grow_pages=grow, swap=args.swap, cold_dtype=args.cold_dtype,
         prefix_cache=args.prefix_cache, use_flash=args.use_flash,
         chunk_size=args.chunk_size, token_budget=args.token_budget,
+        preempt_tile=args.preempt_tile,
+        chunk_governor=(ChunkGovernor(target_tbt_ms=args.adapt_chunk,
+                                      chunk=args.chunk_size or 64,
+                                      min_chunk=min(8, args.chunk_size or 64))
+                        if args.adapt_chunk else None),
         slots_ls=args.slots, slots_be=args.slots, device=args.gpu
         if args.gpu in GPU_DEVICES else "tpu-v5e",
         controller=ctrl, control_interval=args.control_interval,

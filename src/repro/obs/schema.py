@@ -36,7 +36,10 @@ Cause taxonomy for ``plan`` events (the ``name`` field):
     a time-triggered :class:`PlanSchedule` switch;
 ``initial`` / ``replan``
     first plan application, or a re-application with no controller-reported
-    cause (e.g. an externally set plan).
+    cause (e.g. an externally set plan);
+``chunk_adapt``
+    the ChunkGovernor retuned the prefill chunk size / BE prefill budget
+    from the windowed LS TBT p99 (SLO-driven chunk sizing).
 
 Run ``python -m repro.obs.schema trace.jsonl`` to validate an exported JSONL
 stream line-by-line (exit 1 on the first invalid event).
@@ -63,6 +66,10 @@ EVENT_KINDS: Dict[str, Tuple[str, Tuple[str, ...], Tuple[str, ...]]] = {
     "quantum":   ("info", ("I",), ("tenant", "decode_tokens",
                                    "prefill_tokens")),
     "swap":      ("info", ("I",), ("bytes", "direction")),
+    # sub-chunk preemption: "abort" (BE tiles abandoned at a tile
+    # boundary, LS admitted in the same quantum) / "resume" (the aborted
+    # request's next chunk — a smaller chunk, bit-equal tokens)
+    "preempt":   ("info", ("I",), ("tenant", "rid")),
     "flow":      ("info", ("I",), ("src", "dst", "bytes", "t_start",
                                    "t_end")),
     "gauge":     ("info", ("C",), ("value",)),
@@ -74,7 +81,7 @@ EVENT_KINDS: Dict[str, Tuple[str, Tuple[str, ...], Tuple[str, ...]]] = {
 
 #: plan-transition causes (documented above; validated for plan events)
 PLAN_CAUSES = ("slo_guard", "hysteresis", "lending", "snap_back",
-               "watchdog", "schedule", "initial", "replan")
+               "watchdog", "schedule", "initial", "replan", "chunk_adapt")
 
 REQUIRED_KEYS = ("t", "ph", "kind", "name", "track", "args")
 

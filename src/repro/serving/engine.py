@@ -105,7 +105,8 @@ from .. import obs
 from .faults import ColdPageCorrupt, FaultPlane, HostTierFault, safe_floor
 from .kv_cache import PagedKVCache, kv_bytes_per_token
 from .prefix_cache import PrefixCache
-from .scheduler import Phase, QuantumReport, TokenBudgetScheduler
+from .scheduler import (Phase, QuantumReport, TokenBudgetScheduler,
+                        split_tiles)
 from .swap import HostSwapPool
 
 
@@ -188,6 +189,7 @@ class _TenantRT:
     swap_outs: int = 0                      # decode page groups pushed to host
     swap_ins: int = 0                       # page groups faulted back
     grow_stalls: int = 0                    # decode quanta stalled on growth
+    chunk_aborts: int = 0                   # sub-chunk prefill preemptions
     resume_gaps: List[float] = field(default_factory=list)  # evict->token
     # chaos-plane state (serving.faults): counters for the recovery paths
     # plus the per-tenant degradation ladder — every recovery costs one
@@ -760,9 +762,23 @@ class _JaxBackend:
         in the group sit at the write sentinel — writes drop, logits
         ignored). A chunk write landing in a shared page forks it
         copy-on-write first; a chunk that reaches the end of its prompt
-        seeds the request's first output token. Returns tokens computed."""
+        seeds the request's first output token. Returns tokens computed.
+
+        Sub-chunk preemption (``eng.preempt_tile``): a BE tenant's chunks
+        are split into tiles of at most ``preempt_tile`` tokens, and after
+        every executed wave the engine holds a preemption point — if an LS
+        request is waiting, the remaining tiles are aborted (each executed
+        tile already committed its ``prefill_pos``, so the abandoned work
+        is exactly zero tokens) and the waiting LS requests are admitted in
+        *this* quantum instead of after the full chunk. A resumed chunk is
+        just a smaller chunk, so tokens are bit-equal under any preemption
+        pattern (the kernel-level analogue is ``prefill_attention``'s
+        abort/progress protocol)."""
         eng = self.engine
         kv = rt.kv
+        preemptable = bool(eng.preempt_tile) and not rt.spec.is_ls
+        if preemptable:
+            chunks = split_tiles(chunks, eng.preempt_tile)
         by_slot: Dict[int, list] = {}
         for c in chunks:
             by_slot.setdefault(c.slot, []).append(c)
@@ -770,6 +786,7 @@ class _JaxBackend:
         sentinel = self._write_sentinel(rt)
         while any(by_slot.values()):
             wave = [lst.pop(0) for lst in by_slot.values() if lst]
+            wave_tokens = 0
             by_len: Dict[int, list] = {}
             for c in wave:
                 by_len.setdefault(c.length, []).append(c)
@@ -802,7 +819,19 @@ class _JaxBackend:
                             "chunk", f"c{c.start}", t_c,
                             eng._tr_track(rt, c.slot), rid=c.req.rid,
                             start=c.start, len=Sq)
+                if eng._aborted_rids and eng.tracer.enabled("preempt"):
+                    t_c = eng.clock()
+                    for c in group:
+                        if c.req.rid in eng._aborted_rids:
+                            eng.tracer.instant(
+                                "preempt", "resume", t_c,
+                                eng._tr_track(rt, c.slot),
+                                tenant=rt.spec.name, rid=c.req.rid,
+                                start=c.start)
+                for c in group:
+                    eng._aborted_rids.discard(c.req.rid)
                 tokens += Sq * len(group)
+                wave_tokens += Sq * len(group)
                 done = [c for c in group
                         if c.start + Sq >= len(c.req.tokens)]
                 if done:
@@ -816,7 +845,49 @@ class _JaxBackend:
                         hook(rt, c.req)
                 for c in done:
                     self._seed_first_token(rt, c.req, int(arg[c.slot]))
+            if eng.arrival_hook is not None:
+                eng.arrival_hook(wave_tokens)
+            if preemptable and any(by_slot.values()) \
+                    and self._preempt_now():
+                self._abort_remaining(rt, by_slot)
+                break
         return tokens
+
+    def _preempt_now(self) -> bool:
+        """Preemption predicate at the tile boundary: an LS request is
+        waiting for admission (``preempt_hook`` overrides for tests —
+        e.g. always/never/seeded-random preemption)."""
+        eng = self.engine
+        if eng.preempt_hook is not None:
+            return bool(eng.preempt_hook())
+        return any(rt.spec.is_ls
+                   and any(r.phase in (Phase.WAITING, Phase.SWAPPED)
+                           for r in rt.queue)
+                   for rt in eng.tenants.values())
+
+    def _abort_remaining(self, rt: _TenantRT, by_slot):
+        """Abort the quantum's remaining BE tiles and admit waiting LS
+        requests in the same quantum. Executed tiles already committed
+        their ``prefill_pos``, so the aborted requests resume next BE
+        quantum as smaller chunks with zero recomputation and zero token
+        drift."""
+        eng = self.engine
+        now = eng.clock()
+        rt.chunk_aborts += 1
+        eng.preempt_aborts += 1
+        remaining = [lst[0].req for lst in by_slot.values() if lst]
+        for req in remaining:
+            eng._aborted_rids.add(req.rid)
+        if eng.tracer.enabled("preempt"):
+            for req in remaining:
+                eng.tracer.instant(
+                    "preempt", "abort", now, eng._tr_track(rt, req.slot),
+                    tenant=rt.spec.name, rid=req.rid, pos=req.prefill_pos)
+        for ls_rt in eng.tenants.values():
+            if not ls_rt.spec.is_ls or not ls_rt.queue:
+                continue
+            for r in eng.scheduler.admit(ls_rt, eng):
+                eng.preempt_waits.append(max(now - r.t_submit, 0.0))
 
     def _decode(self, rt: _TenantRT, slots: List[int]):
         """One batched decode across the tenant's DECODING slots. Rows not
@@ -897,6 +968,8 @@ class _JaxBackend:
         if dec:
             self._decode(rt, dec)
             report.decode_tokens = len(dec)
+            if eng.arrival_hook is not None:
+                eng.arrival_hook(len(dec))
         admitted = sched.admit(rt, eng)
         if rt.host is not None:
             report.swap_in_pages = self._swap_progress(rt)
@@ -1001,7 +1074,9 @@ class _SimBackend:
             # charges the per-chunk KV re-read + weight re-read tax
             kern = request_kernels(rt.cfg, B, S, "prefill", self.dev,
                                    rt.max_kernels, prefix=prefix_est,
-                                   chunk=eng.chunk_size)
+                                   chunk=eng.chunk_size,
+                                   tile=(eng.preempt_tile
+                                         if not rt.spec.is_ls else None))
             n_prefill_k = len(kern)
             # decode phase carries the KV-cache *write* traffic of the
             # engine's actual decode path — paged appends are O(tokens);
@@ -1158,7 +1233,9 @@ class ServingEngine:
                  deadlock_patience: int = 8,
                  watchdog_quanta: Optional[int] = None,
                  safe_plan: Optional[ResourcePlan] = None,
-                 tracer=None, trace_name: str = ""):
+                 tracer=None, trace_name: str = "",
+                 preempt_tile: Optional[int] = None,
+                 arrival_hook=None, chunk_governor=None):
         self.max_seq = max_seq
         # telemetry plane (repro.obs): the engine always owns a tracer so
         # emission sites stay branch-free; the default level-"off" tracer
@@ -1198,6 +1275,25 @@ class ServingEngine:
         # True to take the slot (the request leaves this engine)
         self.chunk_hook = None
         self.migrate_hook = None
+        # sub-chunk preemption (kernel latency floor): BE prefill chunks
+        # split into tiles of at most preempt_tile tokens, with a
+        # preemption point per tile — on LS arrival mid-quantum the
+        # remaining tiles abort and LS admits in the same quantum.
+        # arrival_hook(n_tokens) fires after every executed prefill wave
+        # and decode batch (benches drive a virtual token clock with it);
+        # preempt_hook (attribute) overrides the LS-waiting predicate for
+        # tests (always/never/seeded-random preemption patterns).
+        self.preempt_tile = (None if not preempt_tile
+                             else max(int(preempt_tile), 1))
+        self.arrival_hook = arrival_hook
+        self.preempt_hook = None
+        self.preempt_aborts = 0
+        self.preempt_waits: List[float] = []
+        self._aborted_rids: set = set()
+        # SLO-driven chunk sizing: a ChunkGovernor rides the control tick
+        # and retunes chunk_size/prefill_budget from the windowed LS TBT
+        # p99 (cause "chunk_adapt" in the transition log)
+        self.chunk_governor = chunk_governor
         # radix-tree copy-on-write KV page sharing (serving.prefix_cache):
         # common prompt prefixes map cached pages into new slots' tables and
         # only the uncached suffix is prefilled
@@ -1550,6 +1646,10 @@ class ServingEngine:
                 sig = self._stale_sig
         else:
             self._stale_sig = sig
+        if self.chunk_governor is not None:
+            self._govern_chunks(sig, now)
+        if self.controller is None:
+            return
         plan = self.controller.decide(sig, t=float(self._step_idx))
         if plan is not self._applied_plan:
             cause = getattr(self.controller, "last_cause", None)
@@ -1575,6 +1675,34 @@ class ServingEngine:
             if debt:
                 self.arena.resplit(debt, pinned=pinned)
                 self.migrated_bytes += self.arena.last_resplit["bytes"]
+
+    def _govern_chunks(self, sig, now: float):
+        """SLO-driven chunk sizing: feed the window's LS TBT p99 (the same
+        registry histogram the controller reads) to the ChunkGovernor and
+        adopt its decision — chunk_size plus the derived BE prefill budget
+        — logged as a ``chunk_adapt`` transition next to plan moves."""
+        decision = self.chunk_governor.update(sig.ls_tbt_p99_ms)
+        if decision is None:
+            return
+        chunk, budget = decision
+        self.chunk_size = chunk
+        self.scheduler.chunk_size = chunk
+        self.scheduler.set_prefill_budget(budget)
+        self.transitions.append({"step": self._step_idx,
+                                 "sm_be": float(self.sm_be),
+                                 "ch_be": float(self.ch_be),
+                                 "pages_moved": 0, "bytes_moved": 0,
+                                 "pinned_groups": 0,
+                                 "chunk_size": int(chunk),
+                                 "prefill_budget": int(budget),
+                                 "cause": "chunk_adapt"})
+        self.tracer.instant("plan", "chunk_adapt", now,
+                            f"{self._trace_prefix}plan",
+                            sm_be=float(self.sm_be),
+                            ch_be=float(self.ch_be),
+                            chunk_size=int(chunk),
+                            prefill_budget=int(budget),
+                            step=self._step_idx)
 
     def _channel_sets(self, ch_be: float):
         """Engine-local channel sets for a plan's ``ch_be`` (the plan's own
@@ -1702,7 +1830,8 @@ class ServingEngine:
         quantum for one tenant of that class. LS strictly preempts BE at
         this boundary when no plan grants BE a share. With an online
         controller attached this boundary is also where re-plans land."""
-        if self.controller is not None and self.backend_name == "jax":
+        if (self.controller is not None or self.chunk_governor is not None) \
+                and self.backend_name == "jax":
             self._maybe_control()
         ls = [rt for rt in self.tenants.values()
               if rt.spec.is_ls and rt.has_work()]
@@ -1826,6 +1955,8 @@ class ServingEngine:
                                          "page_size": rt.kv.page_size}
             if rt.prefix is not None:
                 out[name]["prefix_cache"] = rt.prefix.stats()
+            if rt.chunk_aborts:
+                out[name]["chunk_aborts"] = rt.chunk_aborts
             if rt.host is not None or rt.preemptions or rt.grow_stalls:
                 sw = {"preemptions": rt.preemptions,
                       "swap_outs": rt.swap_outs,
@@ -1878,6 +2009,15 @@ class ServingEngine:
             }
         if self._last_window is not None:
             out["_window"] = self._last_window
+        # sub-chunk preemption rollup: aborts plus the LS submit->admit
+        # waits measured at preemption boundaries (the latency the abort
+        # protocol exists to bound)
+        if self.preempt_tile or self.preempt_aborts:
+            out["_preempt"] = {"tile": self.preempt_tile,
+                               "aborts": self.preempt_aborts,
+                               "wait": self._pcts(self.preempt_waits)}
+        if self.chunk_governor is not None:
+            out["_chunk_governor"] = self.chunk_governor.stats()
         if self.plan is not None:
             out["_plan"] = {"sm_be": self.plan.sm_be,
                             "ch_be": self.plan.ch_be,

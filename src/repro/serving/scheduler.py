@@ -94,6 +94,30 @@ class QuantumReport:
         return self.decode_tokens + self.prefill_tokens
 
 
+def split_tiles(chunks: List[PrefillChunk], tile: Optional[int]) \
+        -> List[PrefillChunk]:
+    """Split a quantum's prefill chunks into preemption tiles of at most
+    ``tile`` tokens each, preserving order and positions. Between any two
+    tiles the engine holds a preemption point: it may abort the remainder
+    and record partial ``prefill_pos``, and because a resumed chunk is just
+    a smaller chunk (and the seeding position stays its own one-token
+    chunk), tokens are bit-equal under any preemption pattern. ``tile``
+    None/0 returns the chunks unchanged (chunk-granular preemption)."""
+    if not tile or tile < 1:
+        return list(chunks)
+    out: List[PrefillChunk] = []
+    for c in chunks:
+        start, end = c.start, c.start + c.length
+        L = len(c.req.tokens)
+        while start < end:
+            stop = min(start + tile, end)
+            if stop == L and stop - start > 1:
+                stop = L - 1         # keep the seeding token its own tile
+            out.append(PrefillChunk(c.req, c.slot, start, stop - start))
+            start = stop
+    return out
+
+
 class TokenBudgetScheduler:
     """Composes engine quanta from per-class token budgets (module
     docstring). Owned by the engine; the backend executes what it emits.

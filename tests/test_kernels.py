@@ -231,6 +231,69 @@ def test_dual_tenant_schedule_quota():
         assert window.count(1) <= 2, (s, window)
 
 
+def test_dual_tenant_schedule_no_starvation():
+    """A fractional quota below one tile per round (sm_be * round_tiles < 1)
+    accumulates as credit: BE tiles interleave before LS drains instead of
+    starving until the tail, and every tile is scheduled exactly once."""
+    from repro.kernels.dual_tenant_matmul import _schedule
+    order = _schedule(n_ls=40, n_be=6, sm_be=0.05, round_tiles=8)
+    owners = [o for o, _ in order]
+    assert owners.count(0) == 40 and owners.count(1) == 6
+    # sm_be=0.05 earns 0.4 credit per 8-tile round -> first BE tile by
+    # round 3 (credit 1.2), well before the 40 LS tiles drain
+    first_be = owners.index(1)
+    assert first_be < 40, f"BE starved until LS drained (index {first_be})"
+    # per-tenant tile ids stay in order and complete
+    assert [r for o, r in order if o == 0] == list(range(40))
+    assert [r for o, r in order if o == 1] == list(range(6))
+    # quota still respected while both run
+    upto = max(i for i, o in enumerate(owners) if o == 0)
+    for s in range(0, upto - 8, 8):
+        assert owners[s:s + 8].count(1) <= 1, (s, owners[s:s + 8])
+
+
+# ---------------------------------------------------------------------------
+# dual-tenant fused attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B_ls,B_be,S,H,Hkv,D,sm_be", [
+    (2, 3, 256, 4, 4, 64, 0.3), (1, 2, 128, 4, 2, 64, 0.5),
+])
+def test_dual_tenant_attention(B_ls, B_be, S, H, Hkv, D, sm_be):
+    """Both tenants of the fused grid match the single-tenant causal flash
+    kernel bit-for-bit — the quota interleave only permutes placement."""
+    ks = jax.random.split(jax.random.key(21), 6)
+    q1 = _rand(ks[0], (B_ls, S, H, D), jnp.float32)
+    k1 = _rand(ks[1], (B_ls, S, Hkv, D), jnp.float32)
+    v1 = _rand(ks[2], (B_ls, S, Hkv, D), jnp.float32)
+    q2 = _rand(ks[3], (B_be, S, H, D), jnp.float32)
+    k2 = _rand(ks[4], (B_be, S, Hkv, D), jnp.float32)
+    v2 = _rand(ks[5], (B_be, S, Hkv, D), jnp.float32)
+    o1, o2 = ops.dual_tenant_attention(q1, k1, v1, q2, k2, v2, sm_be=sm_be,
+                                       block_q=64, block_k=64)
+    w1 = ops.flash_attention(q1, k1, v1, causal=True, block_q=64, block_k=64)
+    w2 = ops.flash_attention(q2, k2, v2, causal=True, block_q=64, block_k=64)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(w1))
+    np.testing.assert_array_equal(np.asarray(o2), np.asarray(w2))
+
+
+def test_dual_tenant_attention_quota_invariant():
+    """sm_be permutes only the schedule: outputs are bit-identical across
+    quota settings."""
+    ks = jax.random.split(jax.random.key(22), 3)
+    q = _rand(ks[0], (2, 128, 4, 64), jnp.float32)
+    k = _rand(ks[1], (2, 128, 4, 64), jnp.float32)
+    v = _rand(ks[2], (2, 128, 4, 64), jnp.float32)
+    outs = [ops.dual_tenant_attention(q, k, v, q, k, v, sm_be=s,
+                                      block_q=64, block_k=64)
+            for s in (0.1, 0.5, 0.9)]
+    for o_ls, o_be in outs[1:]:
+        np.testing.assert_array_equal(np.asarray(o_ls),
+                                      np.asarray(outs[0][0]))
+        np.testing.assert_array_equal(np.asarray(o_be),
+                                      np.asarray(outs[0][1]))
+
+
 # ---------------------------------------------------------------------------
 # ssd scan
 # ---------------------------------------------------------------------------
@@ -326,6 +389,90 @@ def test_prefill_attention_paged_matches_dense():
                                             pos)
     np.testing.assert_allclose(np.asarray(out), np.asarray(wantp),
                                rtol=2e-5, atol=2e-5)
+
+
+def test_prefill_attention_abort_progress():
+    """The sub-chunk abort protocol: with a per-row position cap, the first
+    ``abort`` rows are bit-equal to running a chunk of exactly ``abort``
+    tokens, and ``progress`` reports min(abort, Sq) per row."""
+    B, Sq, H, Hkv, Smax, D = 3, 8, 4, 2, 128, 64
+    ks = jax.random.split(jax.random.key(23), 3)
+    q = _rand(ks[0], (B, Sq, H, D), jnp.float32)
+    kc = _rand(ks[1], (B, Hkv, Smax, D), jnp.float32)
+    vc = _rand(ks[2], (B, Hkv, Smax, D), jnp.float32)
+    pos = jnp.asarray([0, 13, 77], jnp.int32)
+    full = ops.prefill_attention(q, kc, vc, pos, block_k=32)
+    abort = jnp.asarray([3, 8, 0], jnp.int32)
+    out, prog = ops.prefill_attention(q, kc, vc, pos, block_k=32,
+                                      abort=abort)
+    np.testing.assert_array_equal(np.asarray(prog), [3, 8, 0])
+    np.testing.assert_array_equal(np.asarray(out)[0, :3],
+                                  np.asarray(full)[0, :3])
+    np.testing.assert_array_equal(np.asarray(out)[1], np.asarray(full)[1])
+    # an aborted prefix equals a genuinely smaller chunk (the resume
+    # contract: a resumed chunk is just a smaller chunk)
+    small = ops.prefill_attention(q[:, :3], kc, vc, pos, block_k=32)
+    np.testing.assert_array_equal(np.asarray(out)[0, :3],
+                                  np.asarray(small)[0])
+
+
+def test_prefill_attention_paged_abort_progress():
+    """Same protocol through the paged entry point: abort caps agree with
+    the dense kernel and unmapped pages past the cap stay untouched."""
+    B, Smax, Sq, H, Hkv, D, ps = 2, 128, 8, 4, 2, 64, 16
+    P = Smax // ps
+    n_pages = 24
+    ks = jax.random.split(jax.random.key(24), 3)
+    q = _rand(ks[0], (B, Sq, H, D), jnp.float32)
+    kc = _rand(ks[1], (B, Smax, Hkv, D), jnp.float32)
+    vc = _rand(ks[2], (B, Smax, Hkv, D), jnp.float32)
+    pos = jnp.asarray([0, 40], jnp.int32)
+    rng = np.random.default_rng(3)
+    pages = rng.permutation(n_pages)[:B * P].reshape(B, P)
+    kp = np.zeros((n_pages, Hkv, ps, D), np.float32)
+    vp = np.zeros((n_pages, Hkv, ps, D), np.float32)
+    for b in range(B):
+        for j in range(P):
+            kp[pages[b, j]] = np.asarray(kc)[b, j * ps:(j + 1) * ps] \
+                .transpose(1, 0, 2)
+            vp[pages[b, j]] = np.asarray(vc)[b, j * ps:(j + 1) * ps] \
+                .transpose(1, 0, 2)
+    abort = jnp.asarray([5, 2], jnp.int32)
+    out, prog = ops.prefill_attention_paged(
+        jnp.asarray(q), jnp.asarray(kp), jnp.asarray(vp),
+        jnp.asarray(pages.astype(np.int32)), pos, abort=abort)
+    dense, dprog = ops.prefill_attention(
+        q, jnp.asarray(kc).transpose(0, 2, 1, 3),
+        jnp.asarray(vc).transpose(0, 2, 1, 3), pos, block_k=ps, abort=abort)
+    np.testing.assert_array_equal(np.asarray(prog), np.asarray(dprog))
+    np.testing.assert_allclose(np.asarray(out)[0, :5],
+                               np.asarray(dense)[0, :5], rtol=2e-6,
+                               atol=2e-6)
+    np.testing.assert_allclose(np.asarray(out)[1, :2],
+                               np.asarray(dense)[1, :2], rtol=2e-6,
+                               atol=2e-6)
+
+
+def test_interpret_autodetect():
+    """``interpret=None`` resolves from the backend (CPU hosts interpret)
+    and matches an explicit ``interpret=True`` bit-for-bit."""
+    from repro.kernels.pallas_compat import interpret_default
+    assert interpret_default() == (jax.default_backend() != "tpu")
+    B, Smax, H, Hkv, D = 2, 64, 4, 2, 64
+    ks = jax.random.split(jax.random.key(25), 3)
+    q = _rand(ks[0], (B, 4, H, D), jnp.float32)
+    kc = _rand(ks[1], (B, Hkv, Smax, D), jnp.float32)
+    vc = _rand(ks[2], (B, Hkv, Smax, D), jnp.float32)
+    pos = jnp.asarray([0, 9], jnp.int32)
+    auto = ops.prefill_attention(q, kc, vc, pos, block_k=32)
+    explicit = ops.prefill_attention(q, kc, vc, pos, block_k=32,
+                                     interpret=True)
+    np.testing.assert_array_equal(np.asarray(auto), np.asarray(explicit))
+    d_auto = ops.decode_attention(q[:, 0], kc, vc, pos, block_k=32,
+                                  kv_layout="bhsd")
+    d_explicit = ops.decode_attention(q[:, 0], kc, vc, pos, block_k=32,
+                                      kv_layout="bhsd", interpret=True)
+    np.testing.assert_array_equal(np.asarray(d_auto), np.asarray(d_explicit))
 
 
 def test_prefill_attention_reduces_to_decode():

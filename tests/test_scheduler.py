@@ -284,6 +284,150 @@ def test_sim_models_chunked_prefill_phases(tiny):
     assert chunk_pre > mono_pre
 
 
+# ---------------------------------------------------------------------------
+# sub-chunk preemption: tile splitting, policy oracle, chunk governor
+# ---------------------------------------------------------------------------
+
+def test_split_tiles():
+    """Tile splitting preserves coverage, caps every tile at ``tile``
+    tokens, and keeps the final (seeding) prompt token its own one-token
+    tile so resumed chunks stay chunking-invariant."""
+    from types import SimpleNamespace
+
+    from repro.serving.scheduler import PrefillChunk, split_tiles
+
+    req = SimpleNamespace(tokens=list(range(10)))
+    chunk = PrefillChunk(req, 0, 0, 10)
+    assert split_tiles([chunk], None) == [chunk]
+    tiles = split_tiles([chunk], 4)
+    assert [(t.start, t.length) for t in tiles] == [(0, 4), (4, 4),
+                                                    (8, 1), (9, 1)]
+    # a chunk that stops short of the prompt end has no seeding token
+    mid = PrefillChunk(req, 0, 0, 8)
+    assert [(t.start, t.length) for t in split_tiles([mid], 3)] \
+        == [(0, 3), (3, 3), (6, 2)]
+    # tile larger than the chunk: only the seeding-token split applies
+    assert [(t.start, t.length) for t in split_tiles([chunk], 64)] \
+        == [(0, 9), (9, 1)]
+
+
+def _preempt_serve(cfg, params, seed, hook, **kw):
+    """BE long-prompt prefill with LS requests in the queue, under a
+    preemption-policy hook; returns (engine, outputs keyed by rid)."""
+    rng = np.random.default_rng(seed)
+    be_prompts = [rng.integers(0, 100, int(rng.integers(8, 16)))
+                  for _ in range(3)]
+    ls_prompts = [rng.integers(0, 100, int(rng.integers(3, 7)))
+                  for _ in range(2)]
+    eng = ServingEngine(max_seq=MAX_SEQ, slots_ls=2, slots_be=2,
+                        chunk_size=6, preempt_tile=2, **kw)
+    eng.add_tenant(TenantSpec("ls0", "LS"), cfg, params=params)
+    eng.add_tenant(TenantSpec("be0", "BE"), cfg, params=params)
+    eng.preempt_hook = hook
+    reqs = [eng.submit("be0", p, max_new=2) for p in be_prompts]
+    reqs += [eng.submit("ls0", p, max_new=3) for p in ls_prompts]
+    eng.run_until_idle()
+    assert all(r.phase is Phase.FINISHED for r in reqs)
+    return eng, {r.rid: list(r.output) for r in reqs}
+
+
+_TINY_CACHE = {}
+
+
+def _tiny_inline():
+    """Module-cached tiny model for hypothesis tests (the compat shim
+    can't inject pytest fixtures)."""
+    if "cfg" not in _TINY_CACHE:
+        import jax
+        from repro.configs import smoke_config
+        from repro.models import transformer as tf
+        cfg = smoke_config("stablelm-1.6b").replace(
+            num_layers=1, activation_dtype="float32")
+        _TINY_CACHE["cfg"] = cfg
+        _TINY_CACHE["params"] = tf.init_params(jax.random.key(7), cfg)
+    return _TINY_CACHE["cfg"], _TINY_CACHE["params"]
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=3, deadline=None)
+def test_preemption_policy_oracle(seed):
+    """Tokens are bit-equal across preemption policies — never preempt,
+    preempt after every tile, and seeded-random preemption points — because
+    an aborted BE chunk resumes as a smaller chunk over the same tokens."""
+    cfg, params = _tiny_inline()
+    _, ref = _preempt_serve(cfg, params, seed, lambda: False)
+    eng_all, out_all = _preempt_serve(cfg, params, seed, lambda: True)
+    assert out_all == ref
+    assert eng_all.preempt_aborts > 0
+    hook_rng = np.random.default_rng(seed + 1)
+    _, out_rand = _preempt_serve(cfg, params, seed,
+                                 lambda: bool(hook_rng.integers(0, 2)))
+    assert out_rand == ref
+
+
+def test_preemption_bit_equal_paged_flash(tiny):
+    """The preemption oracle holds through the paged and paged+flash
+    kernel paths too, and aborts are visible in metrics()."""
+    cfg, params = tiny
+    for kw in ({"paged": True, "page_size": 4},
+               {"paged": True, "page_size": 4, "use_flash": True}):
+        _, ref = _preempt_serve(cfg, params, 5, lambda: False, **kw)
+        eng, out = _preempt_serve(cfg, params, 5, lambda: True, **kw)
+        assert out == ref, kw
+        m = eng.metrics()
+        assert m["be0"]["chunk_aborts"] > 0
+        assert m["_preempt"]["aborts"] == eng.preempt_aborts
+
+
+def test_chunk_governor_aimd():
+    """AIMD on the windowed TBT p99: breach halves the chunk in one
+    window, recovery needs ``patience`` calm windows below the headroom
+    line, empty windows hold, and the prefill budget tracks the chunk."""
+    from repro.core.controller import ChunkGovernor
+
+    g = ChunkGovernor(target_tbt_ms=10.0, chunk=64, min_chunk=8,
+                      max_chunk=128, headroom=0.5, patience=2,
+                      budget_chunks=2)
+    assert g.prefill_budget == 128
+    assert g.update(None) is None          # no samples: hold
+    assert g.update(50.0) == (32, 64)      # breach: halve
+    assert g.update(50.0) == (16, 32)
+    assert g.update(4.0) is None           # calm window 1 of 2
+    assert g.update(4.0) == (32, 64)       # patience met: double back
+    assert g.update(7.0) is None           # between headroom and target:
+    assert g.update(4.0) is None           # holds and resets calm count
+    assert g.update(4.0) == (64, 128)
+    s = g.stats()
+    assert s == {"chunk": 64, "shrinks": 2, "grows": 2, "windows": 8,
+                 "target_tbt_ms": 10.0}
+    # clamping: at the floor a breach changes nothing and returns None
+    g2 = ChunkGovernor(target_tbt_ms=10.0, chunk=8, min_chunk=8)
+    assert g2.update(99.0) is None and g2.shrinks == 0
+
+
+def test_engine_adopts_chunk_governor(tiny):
+    """An engine wired with a ChunkGovernor shrinks its live chunk_size
+    when the TBT window breaches the target and logs the adoption as a
+    ``chunk_adapt`` transition (PLAN_CAUSES-validated)."""
+    from repro.core.controller import ChunkGovernor
+
+    cfg, params = tiny
+    rng = np.random.default_rng(17)
+    gov = ChunkGovernor(target_tbt_ms=1e-9, chunk=8, min_chunk=2)
+    eng = ServingEngine(max_seq=MAX_SEQ, slots_ls=2, chunk_size=8,
+                        chunk_governor=gov, control_interval=1)
+    eng.add_tenant(TenantSpec("ls0", "LS"), cfg, params=params)
+    for _ in range(2):
+        eng.submit("ls0", rng.integers(0, 100, 6), max_new=4)
+    eng.run_until_idle()
+    adapts = [t for t in eng.transitions if t["cause"] == "chunk_adapt"]
+    assert adapts, "governor never adopted a chunk change"
+    assert eng.chunk_size < 8
+    assert eng.scheduler.chunk_size == eng.chunk_size
+    assert adapts[-1]["chunk_size"] == eng.chunk_size
+    assert eng.metrics()["_chunk_governor"]["shrinks"] >= 1
+
+
 def test_costmodel_chunk_reread_tax():
     """Chunked prefill strictly increases modeled HBM bytes (per-chunk KV
     prefix re-reads + weight re-reads), monotonically as chunks shrink."""
